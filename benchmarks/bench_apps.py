@@ -1,0 +1,36 @@
+"""Fig. 6: application-level accuracy / energy / throughput, DIMA vs the
+8-b digital reference and the conventional architecture."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import energy as en
+from repro.core.applications import run_all
+from repro.core.params import DimaParams
+
+P = DimaParams()
+
+
+def fig6_application_table():
+    res = run_all(P)
+    rows = []
+    for name, r in res.items():
+        paper_e, paper_mb, paper_thr = en.PAPER_TABLE[name]
+        rows.append({
+            "app": name,
+            "acc_dima_pct": round(r.acc_dima * 100, 1),
+            "acc_digital_pct": round(r.acc_digital * 100, 1),
+            "gap_pct": round(abs(r.acc_dima - r.acc_digital) * 100, 1),
+            "energy_pj": round(r.cost.energy_pj, 1),
+            "energy_mb_pj": round(r.cost_mb.energy_pj, 1),
+            "paper_energy_pj": paper_e,
+            "paper_mb_pj": paper_mb,
+            "dec_per_s": round(r.cost.throughput_dec_s),
+            "paper_dec_per_s": paper_thr,
+            "edp_fj_s": round(r.cost.edp_fj_s, 3),
+            "savings_vs_conv": round(r.cost_conv.energy_pj
+                                     / r.cost.energy_pj, 2),
+            "savings_mb_vs_conv": round(r.cost_conv.energy_pj
+                                        / r.cost_mb.energy_pj, 2),
+        })
+    return rows

@@ -1,0 +1,27 @@
+"""The access-reduction / throughput-enhancement claims vs the
+conventional fetch-then-compute architecture."""
+from __future__ import annotations
+
+from repro.core import energy as en
+from repro.core.params import DimaParams
+
+P = DimaParams()
+
+
+def access_and_throughput():
+    d = en.app_cost(P, "mf")
+    c = en.app_cost(P, "mf", arch="conv")
+    return {
+        "access_reduction_x": en.access_reduction(P),        # paper: 16x
+        "throughput_enhancement_x": round(
+            d.throughput_dec_s / c.throughput_dec_s, 2),     # paper: ≤5.8x
+        "dp_energy_savings_x": round(c.energy_pj / d.energy_pj, 2),
+        "dp_energy_savings_multibank_x": round(
+            c.energy_pj / en.app_cost(P, "mf", multi_bank=True).energy_pj, 2),
+        "md_energy_savings_x": round(
+            en.app_cost(P, "tm", arch="conv").energy_pj
+            / en.app_cost(P, "tm").energy_pj, 2),            # paper: 3.7x
+        "md_savings_mb_vs_digital_x": round(
+            en.PAPER_DIGITAL["tm"][0]
+            / en.app_cost(P, "tm", multi_bank=True).energy_pj, 2),  # 5.4x
+    }

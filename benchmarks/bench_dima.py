@@ -1,0 +1,90 @@
+"""Benchmarks mirroring the paper's figures (Fig. 3/4/5/7)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy as en
+from repro.core import noise as noise_mod
+from repro.core import pipeline as pl
+from repro.core.functional_read import pwm_transfer
+from repro.core.params import DimaParams
+
+P = DimaParams()
+KEY = jax.random.PRNGKey(0)
+
+
+def fig3_mrfr_inl():
+    """Sub-ranged MR-FR transfer + INL (paper: max 0.03 LSB)."""
+    codes = jnp.arange(256)
+    m, l = (codes >> 4) & 15, codes & 15
+    v = (16 * pwm_transfer(m.astype(jnp.float32), P)
+         + pwm_transfer(l.astype(jnp.float32), P)) / 17
+    A = jnp.stack([codes.astype(jnp.float32), jnp.ones(256)], 1)
+    coef, *_ = jnp.linalg.lstsq(A, v)
+    inl = float(jnp.max(jnp.abs(v - A @ coef)) / (P.delta_v_lsb / 17))
+    return {"max_inl_lsb": round(inl, 4), "paper_inl_lsb": 0.03}
+
+
+def fig4_blp_cblp_error():
+    """Max |error| as % of output dynamic range on the paper's
+    D=P=const sweep (paper: DP 5.8 %, MD 8.6 %)."""
+    chip_dp = noise_mod.sample_chip(jax.random.PRNGKey(42), P)
+    chip_md = noise_mod.sample_chip(jax.random.PRNGKey(7), P)
+    dp_errs, md_errs = [], []
+    for val in range(0, 256, 4):
+        D = np.full((256,), val)
+        out = pl.dima_dot(D, D, P, chip_dp, jax.random.fold_in(KEY, val))
+        dp_errs.append(abs(float(pl.code_to_dot(out.code, P)) - val * val * 256)
+                       / (255 * 255 * 256) * 100)
+        Q = np.full((256,), 255 - val)
+        out = pl.dima_manhattan(D, Q, P, chip_md,
+                                jax.random.fold_in(KEY, 1000 + val))
+        md_errs.append(abs(float(pl.code_to_md(out.code, P))
+                           - abs(2 * val - 255) * 256) / (255 * 256) * 100)
+    return {"dp_max_err_pct": round(max(dp_errs), 2), "paper_dp_pct": 5.8,
+            "md_max_err_pct": round(max(md_errs), 2), "paper_md_pct": 8.6}
+
+
+def fig5_energy_accuracy_tradeoff():
+    """ΔV_BL sweep: CORE energy/decision vs binary-detection accuracy
+    (matched filter), plus the energy breakdown at nominal ΔV."""
+    rows = []
+    from repro.core.applications import run_mf
+    for scale in (0.1, 0.2, 0.4, 0.6, 1.0):
+        p = P.with_delta_v(P.delta_v_lsb * scale)
+        chip = noise_mod.sample_chip(jax.random.PRNGKey(1), p)
+        acc = run_mf(p, chip, KEY).acc_dima
+        e = en.dima_decision(p, 256, mode="dp", delta_v_scale=scale).energy_pj
+        rows.append({"delta_v_mv": round(p.delta_v_lsb * 1e3, 1),
+                     "energy_pj": round(e, 1), "mf_accuracy": acc})
+    breakdown = {
+        "mrfr_blp_cblp_pj": 2 * P.e_cycle_dp_pj,
+        "adc_pj": P.e_adc_pj,
+        "ctrl_fixed_pj": P.e_fixed_conv_pj,
+    }
+    return {"sweep": rows, "breakdown_mf": breakdown}
+
+
+def fig7_chip_summary():
+    out = {}
+    for app in ("svm", "mf", "tm", "knn"):
+        c = en.app_cost(P, app)
+        out[app] = {"energy_pj": round(c.energy_pj, 1),
+                    "decisions_per_s": round(c.throughput_dec_s),
+                    "paper_energy_pj": en.PAPER_TABLE[app][0],
+                    "paper_dec_s": en.PAPER_TABLE[app][2]}
+    out["sram"] = "16KB (512x256)"
+    out["ctrl_freq"] = "1 GHz"
+    return out
+
+
+def timed(fn, n=3):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = fn()
+    return r, (time.perf_counter() - t0) / n * 1e6

@@ -1,0 +1,78 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows followed by the detailed
+tables. ``PYTHONPATH=src python -m benchmarks.run``
+"""
+from __future__ import annotations
+
+import json
+import time
+
+
+def _timed(fn):
+    fn()                               # warm up (jit)
+    t0 = time.perf_counter()
+    out = fn()
+    us = (time.perf_counter() - t0) * 1e6
+    return out, us
+
+
+def main() -> None:
+    from benchmarks import bench_apps, bench_conventional, bench_dima
+    from benchmarks import roofline
+
+    rows = []
+    details = {}
+
+    fig3, us = _timed(bench_dima.fig3_mrfr_inl)
+    rows.append(("fig3_mrfr_inl", us, f"max_inl={fig3['max_inl_lsb']}LSB"))
+    details["fig3"] = fig3
+
+    fig4, us = _timed(bench_dima.fig4_blp_cblp_error)
+    rows.append(("fig4_blp_cblp_error", us,
+                 f"dp={fig4['dp_max_err_pct']}%/md={fig4['md_max_err_pct']}%"))
+    details["fig4"] = fig4
+
+    fig5, us = _timed(bench_dima.fig5_energy_accuracy_tradeoff)
+    rows.append(("fig5_energy_accuracy", us,
+                 f"sweep_points={len(fig5['sweep'])}"))
+    details["fig5"] = fig5
+
+    fig6, us = _timed(bench_apps.fig6_application_table)
+    worst_gap = max(r["gap_pct"] for r in fig6)
+    rows.append(("fig6_applications", us, f"worst_acc_gap={worst_gap}%"))
+    details["fig6"] = fig6
+
+    fig7, us = _timed(bench_dima.fig7_chip_summary)
+    rows.append(("fig7_chip_summary", us,
+                 f"mf={fig7['mf']['energy_pj']}pJ/dec"))
+    details["fig7"] = fig7
+
+    conv, us = _timed(bench_conventional.access_and_throughput)
+    rows.append(("conventional_comparison", us,
+                 f"access_red={conv['access_reduction_x']}x"))
+    details["conventional"] = conv
+
+    def _roofline():
+        return roofline.table("pod16x16")
+    roof, us = _timed(_roofline)
+    if roof:
+        worst = min(roof, key=lambda r: r["roofline_frac"])
+        rows.append(("roofline_baseline", us,
+                     f"cells={len(roof)};worst={worst['arch']}/"
+                     f"{worst['shape']}={worst['roofline_frac']:.3f}"))
+    details["roofline_cells"] = len(roof)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+
+    print("\n=== details ===")
+    print(json.dumps(details, indent=1, default=str)[:8000])
+    if roof:
+        print("\n=== roofline (single-pod baseline) ===")
+        print(roofline.render_markdown(roof))
+
+
+if __name__ == "__main__":
+    main()

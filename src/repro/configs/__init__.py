@@ -1,0 +1,70 @@
+"""Architecture / shape registry.
+
+``get_arch(name)`` accepts the assignment ids verbatim (and a few
+filesystem-safe aliases).  ``ARCHS`` maps id -> ArchConfig.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    RunConfig,
+    ShapeConfig,
+    SHAPES,
+    reduced,
+)
+
+_MODULES = {
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout_17b_a16e",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi35_moe_42b_a6p6b",
+    "xlstm-1.3b": "repro.configs.xlstm_1p3b",
+    "gemma3-1b": "repro.configs.gemma3_1b",
+    "yi-34b": "repro.configs.yi_34b",
+    "internlm2-20b": "repro.configs.internlm2_20b",
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "chameleon-34b": "repro.configs.chameleon_34b",
+    "musicgen-large": "repro.configs.musicgen_large",
+}
+
+_ALIASES = {name.replace(".", "p").replace("-", "_"): name for name in _MODULES}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_arch(name: str) -> ArchConfig:
+    key = _ALIASES.get(name, name)
+    if key not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[key]).CONFIG
+
+
+class _LazyArchs(dict):
+    def __missing__(self, key):
+        cfg = get_arch(key)
+        self[key] = cfg
+        return cfg
+
+
+ARCHS = _LazyArchs()
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cells(include_skips: bool = False):
+    """The dry-run cell grid: (arch_name, shape_name) pairs.
+
+    long_500k is skipped for pure full-attention archs (DESIGN.md §5)
+    unless include_skips.
+    """
+    out = []
+    for a in ARCH_NAMES:
+        cfg = get_arch(a)
+        for s in SHAPES:
+            if s == "long_500k" and not cfg.sub_quadratic and not include_skips:
+                continue
+            out.append((a, s))
+    return out

@@ -1,0 +1,217 @@
+"""Config system: architecture + input-shape + run configs.
+
+Every assigned architecture is an ``ArchConfig`` registered in
+``repro.configs``; every assigned input shape is a ``ShapeConfig``.
+The cross product (minus documented skips, see DESIGN.md §5) is the
+dry-run / roofline cell grid.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+# Layer-mixer kinds used in block patterns.
+ATTN = "attn"          # global self attention (window == 0 means full)
+LOCAL = "local"        # sliding-window attention (cfg.window)
+MLSTM = "mlstm"        # xLSTM matrix-memory block (chunked linear attention)
+SLSTM = "slstm"        # xLSTM scalar-memory block (sequential scan)
+RGLRU = "rglru"        # RecurrentGemma real-gated LRU block
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """Full architecture description for one assigned model."""
+
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # Block pattern, cycled over layers. ("attn",) == uniform transformer.
+    block_pattern: tuple = (ATTN,)
+    window: int = 0                # sliding window size for LOCAL layers
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    shared_expert: bool = False
+    capacity_factor: float = 1.25
+
+    # Recurrent widths
+    lru_width: int = 0             # RG-LRU state width (0 -> d_model)
+    conv_width: int = 4            # temporal conv width in recurrent blocks
+    mlstm_proj_factor: float = 2.0 # xLSTM up-projection factor
+    slstm_proj_factor: float = 1.3334
+    qkv_block: int = 64            # mLSTM block-diagonal q/k/v block size
+
+    # Embedding / positional
+    external_embed: bool = False   # vlm/audio: frontend stub supplies embeddings
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0     # chatglm applies RoPE to half the head dim
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+
+    # Whether the arch supports the long_500k cell (sub-quadratic path).
+    sub_quadratic: bool = False
+
+    dtype: str = "bfloat16"
+    source: str = ""               # provenance note from the assignment
+
+    # ---- derived ----------------------------------------------------------
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def layer_kind(self, i: int) -> str:
+        return self.block_pattern[i % len(self.block_pattern)]
+
+    def layer_kinds(self):
+        return [self.layer_kind(i) for i in range(self.n_layers)]
+
+    @property
+    def uniform_attention(self) -> bool:
+        """True when every layer is (attn|local) with identical params
+        (only the window/mask differs) -> layers can be lax.scan'ed."""
+        return all(k in (ATTN, LOCAL) for k in self.block_pattern)
+
+    # Parameter count (embedding included once; used for 6·N·D roofline).
+    def param_count(self) -> int:
+        d, ff, V = self.d_model, self.d_ff, self.vocab_size
+        n_attn = sum(1 for k in self.layer_kinds() if k in (ATTN, LOCAL))
+        n_mlstm = sum(1 for k in self.layer_kinds() if k == MLSTM)
+        n_slstm = sum(1 for k in self.layer_kinds() if k == SLSTM)
+        n_rglru = sum(1 for k in self.layer_kinds() if k == RGLRU)
+
+        p = V * d                       # embedding
+        if not self.tie_embeddings:
+            p += V * d                  # lm head
+        p += d                          # final norm
+
+        per_attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        p += n_attn * (per_attn + 2 * d)   # + 2 norms
+
+        # FFN (attached to every attn/local layer when d_ff > 0)
+        if ff > 0:
+            if self.n_experts > 0:
+                ffn = self.n_experts * 3 * d * ff + d * self.n_experts
+                if self.shared_expert:
+                    ffn += 3 * d * ff
+            else:
+                ffn = 3 * d * ff        # SwiGLU: gate, up, down
+            p += n_attn * ffn
+
+        if n_mlstm:
+            pf = self.mlstm_proj_factor
+            inner = int(d * pf)
+            # up+side proj, block-diagonal qkv, out proj, gates, norms
+            per = (2 * d * inner + 3 * inner * self.qkv_block
+                   + inner * d + inner * 2 * self.n_heads
+                   + 2 * inner + 2 * d)
+            p += n_mlstm * per
+        if n_slstm:
+            pf = self.slstm_proj_factor
+            # r/z/i/f gates with input + recurrent weights + ffn
+            per = 8 * d * d + int(2 * d * d * pf) + 2 * d
+            p += n_slstm * per
+        if n_rglru:
+            w = self.lru_width or d
+            per = 2 * d * w + w * d + 2 * w * self.conv_width + 2 * w + 2 * d
+            # Griffin block: two input branches, out proj, conv, lru gates
+            per += 2 * w * w            # RG-LRU input/recurrence gates are w x w
+            p += n_rglru * per
+            if ff > 0:
+                p += n_rglru * 3 * d * ff
+        return int(p)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: routed top_k + shared)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        n_attn = sum(1 for k in self.layer_kinds() if k in (ATTN, LOCAL))
+        dense_experts = self.top_k + (1 if self.shared_expert else 0)
+        inactive = self.n_experts - self.top_k
+        return int(self.param_count() - n_attn * inactive * 3 * d * ff)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input shape. ``mode`` selects which step gets lowered."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str        # train | prefill | decode
+
+    @property
+    def tokens_per_step(self) -> int:
+        if self.mode == "decode":
+            return self.global_batch          # one new token per sequence
+        return self.global_batch * self.seq_len
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """Training/serving hyper-parameters independent of the architecture."""
+
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    seed: int = 0
+    remat_policy: str = "nothing"   # nothing | dots | everything
+    scan_layers: bool = True
+    # serving
+    quant_mode: str = "none"        # none | dima (w4a8 sub-ranged weights)
+    kv_dtype: str = "bf16"          # bf16 | int8 (quantized KV cache)
+    dima_noise: bool = False        # inject the analog noise model in matmuls
+    # distribution
+    grad_compression: bool = False  # int8 error-feedback cross-pod all-reduce
+    microbatches: int = 1           # grad-accumulation microbatches
+
+
+def reduced(cfg: ArchConfig, **over) -> ArchConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    base = dict(
+        n_layers=max(2, len(cfg.block_pattern)),
+        d_model=64,
+        n_heads=2,
+        n_kv_heads=min(2, cfg.n_kv_heads) or 1,
+        head_dim=32,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=256,
+        n_experts=min(4, cfg.n_experts) if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        lru_width=64 if cfg.lru_width else 0,
+        window=min(cfg.window, 16) if cfg.window else 0,
+    )
+    if cfg.name == "xlstm-1.3b":
+        # keep the 7:1 pattern but only one superblock
+        base["n_layers"] = 8
+        base["n_heads"] = 2
+        base["head_dim"] = 32
+    base.update(over)
+    return dataclasses.replace(cfg, **base)

@@ -1,0 +1,25 @@
+"""chameleon-34b [vlm] — early-fusion, VQ image tokens in the text vocab.
+
+48L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=65536. [arXiv:2405.09818; unverified]
+
+Backbone only; the VQ-VAE image tokenizer is a frontend stub —
+``input_specs()`` supplies precomputed patch embeddings (DESIGN.md §5).
+"""
+from repro.configs.base import ArchConfig, ATTN
+
+CONFIG = ArchConfig(
+    name="chameleon-34b",
+    family="vlm",
+    n_layers=48,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=22016,
+    vocab_size=65536,
+    block_pattern=(ATTN,),
+    external_embed=True,
+    rope_theta=10000.0,
+    sub_quadratic=False,
+    source="arXiv:2405.09818; unverified",
+)

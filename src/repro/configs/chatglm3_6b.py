@@ -1,0 +1,22 @@
+"""chatglm3-6b [dense] — 2D RoPE (applied to half the head dim), GQA kv=2.
+
+28L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=65024. [arXiv:2406.12793; hf]
+"""
+from repro.configs.base import ArchConfig, ATTN
+
+CONFIG = ArchConfig(
+    name="chatglm3-6b",
+    family="dense",
+    n_layers=28,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=13696,
+    vocab_size=65024,
+    block_pattern=(ATTN,),
+    rope_fraction=0.5,
+    rope_theta=10000.0,
+    sub_quadratic=False,
+    source="arXiv:2406.12793; hf",
+)

@@ -1,0 +1,27 @@
+"""gemma3-1b [dense] — 5:1 local:global attention, 128k context.
+
+26L d_model=1152 4H (GQA kv=1) d_ff=6912 vocab=262144.
+[hf:google/gemma-3-1b-pt; unverified]
+
+Sliding window 512 on local layers; every 6th layer global. Only global
+layers see the full cache, so long_500k is runnable (DESIGN.md §5).
+"""
+from repro.configs.base import ArchConfig, ATTN, LOCAL
+
+CONFIG = ArchConfig(
+    name="gemma3-1b",
+    family="dense",
+    n_layers=26,
+    d_model=1152,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    vocab_size=262144,
+    block_pattern=(LOCAL, LOCAL, LOCAL, LOCAL, LOCAL, ATTN),
+    window=512,
+    rope_theta=1000000.0,
+    tie_embeddings=True,
+    sub_quadratic=True,
+    source="hf:google/gemma-3-1b-pt; unverified",
+)

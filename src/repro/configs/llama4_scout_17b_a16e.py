@@ -1,0 +1,28 @@
+"""llama4-scout-17b-a16e [moe] — MoE 16 experts top-1 + shared expert.
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048.
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+
+Full attention (the interleaved-chunked variant of the public release is
+not part of the assigned spec) -> long_500k is skipped (DESIGN.md §5).
+"""
+from repro.configs.base import ArchConfig, ATTN
+
+CONFIG = ArchConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    block_pattern=(ATTN,),
+    n_experts=16,
+    top_k=1,
+    shared_expert=True,
+    rope_theta=500000.0,
+    sub_quadratic=False,
+    source="hf:meta-llama/Llama-4-Scout-17B-16E; unverified",
+)

@@ -1,0 +1,25 @@
+"""musicgen-large [audio] — decoder-only over EnCodec tokens (MHA: kv=32).
+
+48L d_model=2048 32H (GQA kv=32) d_ff=8192 vocab=2048. [arXiv:2306.05284; hf]
+
+Backbone only; the EnCodec frontend is a stub — ``input_specs()`` supplies
+precomputed frame embeddings (DESIGN.md §5).
+"""
+from repro.configs.base import ArchConfig, ATTN
+
+CONFIG = ArchConfig(
+    name="musicgen-large",
+    family="audio",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=2048,
+    block_pattern=(ATTN,),
+    external_embed=True,
+    rope_theta=10000.0,
+    sub_quadratic=False,
+    source="arXiv:2306.05284; hf",
+)

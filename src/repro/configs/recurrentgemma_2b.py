@@ -1,0 +1,27 @@
+"""recurrentgemma-2b [hybrid] — Griffin: RG-LRU + local attention, 2:1.
+
+26L d_model=2560 10H (GQA kv=1) d_ff=7680 vocab=256000. [arXiv:2402.19427; hf]
+
+Pattern (rglru, rglru, local) cycled; window 2048. Constant/windowed state
+-> long_500k runs.
+"""
+from repro.configs.base import ArchConfig, LOCAL, RGLRU
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256000,
+    block_pattern=(RGLRU, RGLRU, LOCAL),
+    window=2048,
+    lru_width=2560,
+    conv_width=4,
+    tie_embeddings=True,
+    sub_quadratic=True,
+    source="arXiv:2402.19427; hf",
+)

@@ -1,0 +1,24 @@
+"""xlstm-1.3b [ssm] — sLSTM + mLSTM blocks, 7:1 mLSTM:sLSTM.
+
+48L d_model=2048 4H (GQA kv=4) d_ff=0 vocab=50304.  [arXiv:2405.04517; unverified]
+
+d_ff=0: xLSTM blocks carry their own up-projection (factor 2 for mLSTM).
+Constant-size recurrent state -> sub-quadratic -> long_500k runs.
+"""
+from repro.configs.base import ArchConfig, MLSTM, SLSTM
+
+CONFIG = ArchConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=512,
+    d_ff=0,
+    vocab_size=50304,
+    block_pattern=(MLSTM,) * 7 + (SLSTM,),
+    mlstm_proj_factor=2.0,
+    sub_quadratic=True,
+    source="arXiv:2405.04517; unverified",
+)

@@ -1,0 +1,13 @@
+"""DIMA core: the paper's deep in-memory inference pipeline in JAX.
+
+MR-FR → BLP → CBLP → ADC (+ energy/timing models + the four applications).
+"""
+from repro.core.params import DimaParams  # noqa: F401
+from repro.core.pipeline import (  # noqa: F401
+    DimaOut, dima_dot, dima_manhattan, dima_matvec,
+    digital_dot, digital_manhattan, code_to_dot, code_to_md,
+    dp_gain, md_gain,
+)
+from repro.core import energy  # noqa: F401
+from repro.core.noise import sample_chip, ideal_chip  # noqa: F401
+from repro.core.applications import run_all, ALL_APPS, AppResult  # noqa: F401

@@ -1,0 +1,44 @@
+"""8-b single-slope ADC + slicer (Fig. 2: four ADCs run in parallel).
+
+Single-slope = slow (≈256 CTRL cycles) but tiny energy — the paper's
+throughput numbers hinge on it (see energy.py timing model).  The range
+(v_min, v_max) is programmable per application: mixed-signal front-ends
+auto-range so the 8 bits land on the signal's dynamic range.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.params import DimaParams
+
+
+def adc(v, v_min, v_max, p: DimaParams):
+    """volts -> code in [0, 2^bits − 1]."""
+    full = 2 ** p.adc_bits - 1
+    x = (v - v_min) / jnp.maximum(v_max - v_min, 1e-9)
+    return jnp.clip(jnp.round(x * full), 0, full).astype(jnp.int32)
+
+
+def dac(code, v_min, v_max, p: DimaParams):
+    full = 2 ** p.adc_bits - 1
+    return v_min + code.astype(jnp.float32) / full * (v_max - v_min)
+
+
+def calibrate_range(volts, margin=0.05):
+    """Pick (v_min, v_max) from calibration samples with headroom."""
+    lo = float(jnp.min(volts))
+    hi = float(jnp.max(volts))
+    span = max(hi - lo, 1e-9)
+    return lo - margin * span, hi + margin * span
+
+
+def slice_binary(code, threshold_code):
+    return (code >= threshold_code).astype(jnp.int32)
+
+
+def slice_argmin(codes, axis=-1):
+    return jnp.argmin(codes, axis=axis)
+
+
+def slice_argmax(codes, axis=-1):
+    return jnp.argmax(codes, axis=axis)

@@ -1,0 +1,31 @@
+"""CBLP: cross-BL charge-share aggregation (Fig. 4).
+
+Shorting N identical rail caps computes their *mean* — a scaled sum for
+free.  Two consecutive access cycles land on two sampling caps and are
+charge-shared (mean again); the P_MSB/P_LSB rails merge 16:1 like the
+sub-ranged read.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import noise as noise_mod
+from repro.core.params import DimaParams
+
+
+def column_share(v_cols, p: DimaParams, key=None):
+    """Mean over the active columns: (..., n) -> (...)."""
+    v = jnp.mean(v_cols, axis=-1)
+    if key is not None:
+        v = v + noise_mod.normal(key, v.shape, p.sigma_cblp_mv * 1e-3)
+    return v
+
+
+def cycle_share(v_cycles, p: DimaParams):
+    """Mean over the per-cycle sampling caps: (..., n_cycles) -> (...)."""
+    return jnp.mean(v_cycles, axis=-1)
+
+
+def rail_merge(v_msb_rail, v_lsb_rail, p: DimaParams):
+    """(16·msb + lsb)/17 — same ratio network as the sub-ranged read."""
+    return (16.0 * v_msb_rail + v_lsb_rail) / 17.0

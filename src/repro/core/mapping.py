@@ -1,0 +1,100 @@
+"""Bit-cell-array layout: how 8-b words map onto the 512×256 6T array.
+
+Sub-ranged storage (Fig. 3): an 8-b word occupies a *column pair* — 4 MSBs
+in the even column, 4 LSBs in the odd column — across 4 consecutive rows
+(bit i of a sub-word in row 4·r+i, MSB-first).  One bank therefore holds
+128 word-rows × 128 words = 16 KB, and one MR-FR access reads an entire
+word-row (128 words) in a single precharge.
+
+A 256-dim vector spans 2 consecutive word-rows (two access cycles whose
+CBLP outputs are charge-shared, Fig. 2).
+
+`pack`/`unpack` are exact inverses (tested); the functional-read model
+consumes the bit array directly, so layout faithfulness is load-bearing,
+not cosmetic.  `banks_for_matrix` maps LM weight matrices onto banks for
+the multi-bank scaling analysis (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.params import DimaParams
+
+
+def pack(words, p: DimaParams = DimaParams()):
+    """words: (word_rows, words_per_access) uint8 -> bits (512, 256) uint8."""
+    words = jnp.asarray(words, jnp.uint8)
+    wr, wpa = p.word_rows, p.words_per_access
+    assert words.shape == (wr, wpa), words.shape
+    msb = (words >> 4) & 0xF
+    lsb = words & 0xF
+    # sub-word bit i lives in row 4r + (sub_bits-1-i)  (MSB in the top row)
+    shifts = jnp.arange(p.sub_bits - 1, -1, -1, dtype=jnp.uint8)
+    msb_bits = (msb[:, None, :] >> shifts[None, :, None]) & 1   # (wr,4,wpa)
+    lsb_bits = (lsb[:, None, :] >> shifts[None, :, None]) & 1
+    cols = jnp.stack([msb_bits, lsb_bits], axis=-1)             # (wr,4,wpa,2)
+    return cols.reshape(wr * p.sub_bits, wpa * 2)
+
+
+def unpack(bits, p: DimaParams = DimaParams()):
+    """bits (512, 256) -> words (word_rows, words_per_access) uint8."""
+    bits = jnp.asarray(bits, jnp.uint8)
+    wr, wpa = p.word_rows, p.words_per_access
+    cols = bits.reshape(wr, p.sub_bits, wpa, 2)
+    shifts = jnp.arange(p.sub_bits - 1, -1, -1, dtype=jnp.uint8)
+    sub = jnp.sum(cols.astype(jnp.uint32) << shifts[None, :, None, None].astype(jnp.uint32),
+                  axis=1)                                       # (wr,wpa,2)
+    return (sub[..., 0] * 16 + sub[..., 1]).astype(jnp.uint8)
+
+
+def subwords(bits, word_row, p: DimaParams = DimaParams()):
+    """The (msb, lsb) 4-b codes seen by one MR-FR access of ``word_row``.
+    Returns two (words_per_access,) int32 arrays — exactly what the PWM
+    word-lines + column pairs present to the analog chain."""
+    rows = jax.lax.dynamic_slice_in_dim(
+        jnp.asarray(bits, jnp.uint8), word_row * p.sub_bits, p.sub_bits, axis=0)
+    cols = rows.reshape(p.sub_bits, p.words_per_access, 2)
+    weights = (2 ** jnp.arange(p.sub_bits - 1, -1, -1, dtype=jnp.int32))
+    sub = jnp.einsum("bwc,b->wc", cols.astype(jnp.int32), weights)
+    return sub[:, 0], sub[:, 1]
+
+
+def vectors_to_banks(mat, p: DimaParams = DimaParams()):
+    """Pack a (n_vec, dim) uint8 matrix into banks.
+
+    Each vector is padded to a multiple of 128 and laid out on consecutive
+    word-rows.  Returns (banks, layout) where banks is
+    (n_banks, 512, 256) uint8 bits and layout maps vector ->
+    (bank, first_word_row, n_word_rows).
+    """
+    mat = np.asarray(mat, np.uint8)
+    n_vec, dim = mat.shape
+    wpa, wr = p.words_per_access, p.word_rows
+    rows_per_vec = int(np.ceil(dim / wpa))
+    padded = np.zeros((n_vec, rows_per_vec * wpa), np.uint8)
+    padded[:, :dim] = mat
+    vec_per_bank = wr // rows_per_vec
+    n_banks = int(np.ceil(n_vec / vec_per_bank))
+
+    banks, layout = [], []
+    for b in range(n_banks):
+        words = np.zeros((wr, wpa), np.uint8)
+        for s in range(vec_per_bank):
+            v = b * vec_per_bank + s
+            if v >= n_vec:
+                break
+            words[s * rows_per_vec:(s + 1) * rows_per_vec] = (
+                padded[v].reshape(rows_per_vec, wpa))
+            layout.append((b, s * rows_per_vec, rows_per_vec))
+        banks.append(np.asarray(pack(words, p)))
+    return np.stack(banks), layout
+
+
+def banks_for_matrix(shape, bits=8, p: DimaParams = DimaParams()) -> int:
+    """How many 16 KB DIMA banks a weight matrix occupies (multi-bank
+    scaling: banks shard across mesh axes like TP shards)."""
+    n = int(np.prod(shape))
+    bits_total = n * bits
+    return int(np.ceil(bits_total / (p.n_rows * p.n_cols)))

@@ -1,0 +1,41 @@
+"""Static mismatch (per chip instance) and dynamic noise sampling.
+
+Static mismatch is sampled once per simulated chip (`sample_chip`) and
+reused across reads — matching silicon, where column gain / cap-ratio /
+multiplier errors are fixed-pattern.  Dynamic noise (thermal, PWM jitter,
+comparator) is drawn per read from the call's rng key.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import DimaParams
+
+
+def sample_chip(key, p: DimaParams = DimaParams()):
+    """Fixed-pattern mismatch for one chip instance."""
+    n = p.words_per_access
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "col_gain": 1.0 + p.sigma_gain_col * jax.random.normal(k1, (n,)),
+        "cap_ratio_err": p.sigma_cap_ratio * jax.random.normal(k2, (n,)),
+        "mult_gain": 1.0 + p.sigma_mult_gain * jax.random.normal(k3, (2, n)),
+        "mult_off": p.sigma_mult_off_mv * 1e-3 * jax.random.normal(k4, (2, n)),
+    }
+
+
+def ideal_chip(p: DimaParams = DimaParams()):
+    n = p.words_per_access
+    return {
+        "col_gain": jnp.ones((n,)),
+        "cap_ratio_err": jnp.zeros((n,)),
+        "mult_gain": jnp.ones((2, n)),
+        "mult_off": jnp.zeros((2, n)),
+    }
+
+
+def normal(key, shape, sigma):
+    if key is None or sigma == 0.0:
+        return jnp.zeros(shape)
+    return sigma * jax.random.normal(key, shape)

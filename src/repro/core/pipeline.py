@@ -1,0 +1,186 @@
+"""The full 4-stage deep in-memory pipeline (Fig. 1/2):
+
+    MR-FR  →  BLP  →  CBLP  →  ADC & slice
+
+``dima_dot`` / ``dima_manhattan`` process one ≤256-dim operation per ADC
+conversion (two access cycles of 128 words charge-shared, exactly the
+prototype's dataflow).  Everything is vectorized over leading batch dims
+(queries × stored vectors × banks) — the massively-parallel multi-bank
+scenario is a vmap.
+
+A parallel exact *digital reference* implements the conventional
+architecture's arithmetic for the ≤1 %-accuracy-gap experiments.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adc as adc_mod
+from repro.core import blp as blp_mod
+from repro.core import cblp as cblp_mod
+from repro.core import functional_read as fr
+from repro.core.params import DimaParams
+
+
+class DimaOut(NamedTuple):
+    code: jnp.ndarray        # ADC output (int32)
+    volts: jnp.ndarray       # pre-ADC analog value
+    n_cycles: int            # access cycles consumed (energy/timing model)
+    n_conversions: int
+
+
+def _pad_to_conversion(x, p: DimaParams):
+    n = x.shape[-1]
+    full = p.dims_per_conversion
+    if n < full:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, full - n)]
+        x = jnp.pad(x, pad)
+    return x
+
+
+def dp_gain(p: DimaParams) -> float:
+    """Ideal volts per unit of mean(D·P):  V = mean_j(D_j P_j) · G.
+
+    Two 17s: D's sub-range merge and P's rail merge; 16: the 4-b
+    capacitive multiplier's charge division."""
+    return fr.word_gain(p) / (16.0 * 17.0)
+
+
+def md_gain(p: DimaParams) -> float:
+    """Ideal volts per unit of mean(|D−P|)."""
+    return fr.word_gain(p)
+
+
+def dima_dot(d_words, p_words, p: DimaParams, chip=None, key=None,
+             v_range=None) -> DimaOut:
+    """Dot product mode. d_words/p_words: (..., n≤256) ints in [0,255].
+
+    Returns ADC code ≈ mean_j(D_j·P_j)·G mapped onto (v_min, v_max).
+    """
+    d = _pad_to_conversion(jnp.asarray(d_words, jnp.int32), p)
+    q = _pad_to_conversion(jnp.asarray(p_words, jnp.int32), p)
+    w = p.words_per_access
+    n_cycles = d.shape[-1] // w
+
+    keys = _keys(key, 3)
+    rails_m, rails_l = [], []
+    for c in range(n_cycles):                       # two pipelined accesses
+        dc = d[..., c * w:(c + 1) * w]
+        qc = q[..., c * w:(c + 1) * w]
+        msb, lsb = fr.split_words(dc)
+        kk = _fold(keys[0], c)
+        v_word = fr.mr_fr(msb, lsb, p, chip, kk)
+        rm, rl = blp_mod.blp_dp(v_word, qc, p, chip, _fold(keys[1], c))
+        rails_m.append(cblp_mod.column_share(rm, p, _fold(keys[2], 2 * c)))
+        rails_l.append(cblp_mod.column_share(rl, p, _fold(keys[2], 2 * c + 1)))
+
+    v_m = cblp_mod.cycle_share(jnp.stack(rails_m, -1), p)
+    v_l = cblp_mod.cycle_share(jnp.stack(rails_l, -1), p)
+    v = cblp_mod.rail_merge(v_m, v_l, p)
+
+    if v_range is None:
+        v_range = (0.0, 255.0 * 255.0 * dp_gain(p))
+    code = adc_mod.adc(v, v_range[0], v_range[1], p)
+    return DimaOut(code, v, n_cycles, 1)
+
+
+def dima_manhattan(d_words, p_words, p: DimaParams, chip=None, key=None,
+                   v_range=None) -> DimaOut:
+    """Manhattan-distance mode: replica read develops D + (255−P); the
+    comparator/mux takes |·−ref|; CBLP averages."""
+    d = _pad_to_conversion(jnp.asarray(d_words, jnp.int32), p)
+    q = _pad_to_conversion(jnp.asarray(p_words, jnp.int32), p)
+    w = p.words_per_access
+    n_cycles = d.shape[-1] // w
+
+    keys = _keys(key, 4)
+    # the comparator reference: both rails at D = P (word value 255 summed)
+    v_ref = fr.mr_fr(jnp.full((1,), 15), jnp.full((1,), 15), p, None, None,
+                     rep_msb=jnp.zeros((1,), jnp.int32),
+                     rep_lsb=jnp.zeros((1,), jnp.int32))[0]
+    outs = []
+    for c in range(n_cycles):
+        dc = d[..., c * w:(c + 1) * w]
+        qc = q[..., c * w:(c + 1) * w]
+        msb, lsb = fr.split_words(dc)
+        pm, plw = fr.split_words(255 - qc)          # replica stores P̄
+        v_bl = fr.mr_fr(msb, lsb, p, chip, _fold(keys[0], c),
+                        rep_msb=pm, rep_lsb=plw)
+        dm, dl = fr.split_words(255 - dc)           # BLB: complementary cell
+        qm, ql = fr.split_words(qc)
+        v_blb = fr.mr_fr(dm, dl, p, chip, _fold(keys[3], c),
+                         rep_msb=qm, rep_lsb=ql)
+        v_abs = blp_mod.blp_md(v_bl, v_blb, v_ref, p, chip, _fold(keys[1], c))
+        outs.append(cblp_mod.column_share(v_abs, p, _fold(keys[2], c)))
+
+    v = cblp_mod.cycle_share(jnp.stack(outs, -1), p)
+    if v_range is None:
+        v_range = (0.0, 255.0 * md_gain(p))
+    code = adc_mod.adc(v, v_range[0], v_range[1], p)
+    return DimaOut(code, v, n_cycles, 1)
+
+
+def dima_matvec(d_mat, p_vec, p: DimaParams, chip=None, key=None,
+                mode="dp", v_range=None) -> DimaOut:
+    """All stored vectors against one query: d_mat (m, n), p_vec (n,).
+    Physically: m×(n/128) access cycles on one bank, or m/32 of that in
+    the 32-bank scenario — accounted by energy.py, simulated as a vmap."""
+    m = d_mat.shape[0]
+    keys = (jax.random.split(key, m) if key is not None else [None] * m)
+    f = dima_dot if mode == "dp" else dima_manhattan
+    outs = [f(d_mat[i], p_vec, p, chip, keys[i], v_range) for i in range(m)]
+    code = jnp.stack([o.code for o in outs])
+    volts = jnp.stack([o.volts for o in outs])
+    return DimaOut(code, volts, sum(o.n_cycles for o in outs),
+                   sum(o.n_conversions for o in outs))
+
+
+# ---------------------------------------------------------------------------
+# conventional-architecture digital reference (exact 8-b arithmetic)
+# ---------------------------------------------------------------------------
+
+def digital_dot(d_words, p_words):
+    d = jnp.asarray(d_words, jnp.int32)
+    q = jnp.asarray(p_words, jnp.int32)
+    return jnp.sum(d * q, axis=-1)   # ≤ 256·255² < 2³¹
+
+
+def digital_manhattan(d_words, p_words):
+    d = jnp.asarray(d_words, jnp.int32)
+    q = jnp.asarray(p_words, jnp.int32)
+    return jnp.sum(jnp.abs(d - q), axis=-1)
+
+
+def code_to_dot(code, p: DimaParams, v_range=None):
+    """Decode an ADC code back to dot-product units (for comparisons).
+    The CBLP mean is over dims_per_conversion (zero-padded), so the sum
+    rescales by that fixed count."""
+    if v_range is None:
+        v_range = (0.0, 255.0 * 255.0 * dp_gain(p))
+    v = adc_mod.dac(code, v_range[0], v_range[1], p)
+    return v / dp_gain(p) * p.dims_per_conversion
+
+
+def code_to_md(code, p: DimaParams, v_range=None):
+    if v_range is None:
+        v_range = (0.0, 255.0 * md_gain(p))
+    v = adc_mod.dac(code, v_range[0], v_range[1], p)
+    return v / md_gain(p) * p.dims_per_conversion
+
+
+# ---------------------------------------------------------------------------
+
+def _keys(key, n):
+    if key is None:
+        return [None] * n
+    return list(jax.random.split(key, n))
+
+
+def _fold(key, i):
+    if key is None:
+        return None
+    return jax.random.fold_in(key, i)

@@ -1,0 +1,1 @@
+from repro.distributed.sharding import ShardCtx, param_shardings, batch_shardings  # noqa: F401

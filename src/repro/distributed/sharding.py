@@ -1,0 +1,266 @@
+"""Logical-axis sharding: the one place that knows how tensors map to the mesh.
+
+Scheme (DESIGN.md §6):
+  * ``batch``  -> ('pod', 'data')    data parallelism (pod axis is pure DP)
+  * ``seq``    -> 'model'            sequence parallelism (Megatron-SP style
+                                     residual stream + context-parallel attention;
+                                     uniform across archs so head counts that
+                                     don't divide 16 are never an issue)
+  * ``ff`` / ``heads_flat`` / ``vocab`` / ``expert`` -> 'model'   tensor/expert parallel
+  * weights are replicated over ('pod', 'data') and sharded over 'model'.
+
+``ShardCtx.sc(x, dims)`` applies a with_sharding_constraint built from
+logical dim names, silently dropping any axis that does not divide the
+concrete dimension (e.g. batch=1 decode) — the constraint is then
+"replicated" on that dim, which is always legal.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical name -> mesh axis name(s)
+_LOGICAL = {
+    "batch": ("pod", "data"),
+    "seq": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "model_dim": ("model",),   # used for flattened head/ff dims in weights
+    None: (),
+}
+
+
+@dataclass
+class ShardCtx:
+    """Threads the mesh + logical-axis resolution through model code.
+
+    ``variant`` switches whole sharding strategies (the perf-iteration
+    knob, EXPERIMENTS.md §Perf):
+      * "baseline"     — Megatron-SP (seq-sharded residual, TP weights);
+      * "wg_ffn"       — weight-gathered FFN: activations stay
+                         seq-sharded; GSPMD gathers the ff-sharded weights
+                         instead of the (much larger) activations;
+      * "no_tp"        — no tensor parallelism: weights replicated, pure
+                         DP (+ ZeRO-1 moment sharding in the launcher) —
+                         for archs whose cell compute defeats TP (xLSTM).
+    """
+
+    mesh: Optional[Mesh] = None
+    variant: str = "baseline"
+
+    def axes_for(self, logical: Optional[str]) -> tuple:
+        if self.mesh is None or logical is None:
+            return ()
+        if self.variant == "no_tp":
+            if logical in ("ff", "seq", "model_dim"):
+                return ()
+            if logical == "batch":
+                # the model axis would sit idle: give it to batch (pure
+                # 256-way DP; per-device compute = global/256)
+                present = set(self.mesh.axis_names)
+                return tuple(a for a in ("pod", "data", "model")
+                             if a in present)
+        if logical == "batch_full":
+            # xlstm_bshard variant: recurrent-cell tensors shard batch over
+            # data AND model (the projections reshard via cheap all-to-all)
+            names = (("pod", "data", "model")
+                     if self.variant == "xlstm_bshard" else ("pod", "data"))
+            present = set(self.mesh.axis_names)
+            return tuple(a for a in names if a in present)
+        present = set(self.mesh.axis_names)
+        return tuple(a for a in _LOGICAL[logical] if a in present)
+
+    def spec(self, dims: Sequence[Optional[str]], shape=None) -> P:
+        """PartitionSpec from logical dim names; drops non-dividing axes."""
+        parts = []
+        for i, d in enumerate(dims):
+            axes = self.axes_for(d)
+            if not axes:
+                parts.append(None)
+                continue
+            if shape is not None:
+                n = int(np.prod([self.mesh.shape[a] for a in axes]))
+                if shape[i] % n != 0:
+                    parts.append(None)
+                    continue
+            parts.append(axes if len(axes) > 1 else axes[0])
+        return P(*parts)
+
+    def sc(self, x, *dims):
+        """with_sharding_constraint by logical dim names (no-op off-mesh)."""
+        if self.mesh is None:
+            return x
+        spec = self.spec(dims, shape=x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    # -- input/param sharding helpers (used by the launcher) ---------------
+    def named(self, spec: P) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, spec)
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules: path-regex -> logical dims per tensor rank.
+# Paths are "/"-joined pytree keys, e.g. "layers/attn/wq".
+# Weights: last (output) dim on 'model' for column-parallel, first for
+# row-parallel; experts add a leading 'expert' dim.
+# ---------------------------------------------------------------------------
+
+_RULES = [
+    # embeddings / output head: vocab-sharded
+    (r"embed/table$",            ("vocab", None)),
+    (r"lm_head$",                (None, "vocab")),
+    # attention (flattened head dims)
+    (r"attn/wq$",                (None, "model_dim")),
+    (r"attn/wk$",                (None, None)),       # KV replicated (GQA kv<16)
+    (r"attn/wv$",                (None, None)),
+    (r"attn/wo$",                ("model_dim", None)),
+    # dense FFN
+    (r"ffn/w_gate$",             (None, "ff")),
+    (r"ffn/w_up$",               (None, "ff")),
+    (r"ffn/w_down$",             ("ff", None)),
+    # MoE
+    (r"moe/router$",             (None, None)),
+    (r"moe/w_gate$",             ("expert", None, None)),
+    (r"moe/w_up$",               ("expert", None, None)),
+    (r"moe/w_down$",             ("expert", None, None)),
+    (r"moe/shared/w_gate$",      (None, "ff")),
+    (r"moe/shared/w_up$",        (None, "ff")),
+    (r"moe/shared/w_down$",      ("ff", None)),
+    # xLSTM
+    (r"mlstm/w_up$",             (None, "ff")),
+    (r"mlstm/w_side$",           (None, "ff")),
+    (r"mlstm/w_(q|k|v)$",        (None, None, None)), # block-diag: replicate
+    (r"mlstm/w_down$",           ("ff", None)),
+    (r"mlstm/w_gates$",          (None, None)),
+    # sLSTM stays replicated: feature-sharding the recurrence was tried
+    # (EXPERIMENTS.md §Perf C3) and REFUTED — GSPMD reshards the
+    # block-diagonal einsum per timestep (involuntary full remat,
+    # b/433785288), tripling memory traffic for a 2.7x collective win.
+    (r"slstm/",                  (None, None)),
+    # RG-LRU / Griffin
+    (r"rglru/w_x$",              (None, "ff")),
+    (r"rglru/w_gate_branch$",    (None, "ff")),
+    (r"rglru/w_out$",            ("ff", None)),
+    (r"rglru/(w_a|w_i)$",        (None, "ff")),
+    (r"rglru/(conv_w|conv_b|log_lambda|b_a|b_i)$", ("ff",)),
+]
+
+
+def _spec_for_path(path: str, ndim: int, ctx: ShardCtx, shape) -> P:
+    # quantized weight records live one level deeper: <weight>/{q,q4,scale}
+    m = re.search(r"(.*)/(q|q4|scale)$", path)
+    leaf_kind = None
+    if m:
+        path, leaf_kind = m.group(1), m.group(2)
+    for pat, dims in _RULES:
+        if re.search(pat, path):
+            if leaf_kind == "scale":
+                dims = dims[-1:]           # per-output-channel vector
+            if len(dims) != ndim:
+                # scanned layers add leading stack dims; pad with None
+                dims = (None,) * (ndim - len(dims)) + tuple(dims)
+            return ctx.spec(dims[-ndim:] if len(dims) > ndim else dims,
+                            shape=shape)
+    return P()  # norms, biases, gates: replicated
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_shardings(params_shape, ctx: ShardCtx):
+    """Pytree of NamedShardings (or None off-mesh) matching params."""
+    if ctx.mesh is None:
+        return jax.tree_util.tree_map(lambda _: None, params_shape)
+
+    def one(kp, leaf):
+        spec = _spec_for_path(_path_str(kp), len(leaf.shape), ctx, leaf.shape)
+        if ctx.variant == "fsdp" and len(leaf.shape) >= 2:
+            # FSDP: additionally shard the first free dim over 'data'
+            n_data = ctx.mesh.shape.get("data", 1)
+            parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+            for i, (d, p_) in enumerate(zip(leaf.shape, parts)):
+                if p_ is None and d % n_data == 0 and d >= n_data:
+                    parts[i] = "data"
+                    break
+            spec = P(*parts)
+        return NamedSharding(ctx.mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def batch_shardings(batch_shape, ctx: ShardCtx):
+    """Inputs: shard dim0 (batch) over ('pod','data') when it divides."""
+    if ctx.mesh is None:
+        return jax.tree_util.tree_map(lambda _: None, batch_shape)
+
+    def one(leaf):
+        dims = ["batch"] + [None] * (len(leaf.shape) - 1)
+        return NamedSharding(ctx.mesh, ctx.spec(dims, shape=leaf.shape))
+
+    return jax.tree_util.tree_map(one, batch_shape)
+
+
+def cache_shardings(cache_shape, ctx: ShardCtx):
+    """KV caches: (B, S, KV, dh) -> batch on DP axes, seq on 'model'.
+    Recurrent states (B, ...) -> batch only."""
+    if ctx.mesh is None:
+        return jax.tree_util.tree_map(lambda _: None, cache_shape)
+
+    def one(kp, leaf):
+        path = _path_str(kp)
+        nd = len(leaf.shape)
+        if re.search(r"(^|/)(k|v)$", path) and nd >= 4:
+            dims = [None] * nd
+            dims[-4] = "batch"
+            dims[-3] = "seq"
+        elif re.search(r"(^|/)(k_scale|v_scale)$", path) and nd >= 3:
+            dims = [None] * nd
+            dims[-3] = "batch"
+            dims[-2] = "seq"
+        else:
+            dims = [None] * nd
+            if nd >= 1:
+                dims[-2 if nd >= 2 else -1] = None
+            # recurrent states: shard the (large) feature dim? keep batch only
+            dims = ["batch"] + [None] * (nd - 1) if nd >= 1 else dims
+            # stacked-scan states have leading layer dims; batch is not dim0 then
+            if re.search(r"(^|/)(state_c|state_n|state_m|h|conv)$", path) and nd >= 2:
+                dims = [None] * nd
+        return NamedSharding(ctx.mesh, ctx.spec(dims, shape=leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def zero1_opt_shardings(params_shape, ctx: ShardCtx):
+    """ZeRO-1: shard Adam moments over the 'data' axis on the first
+    divisible dim (falls back to the param sharding when none divides)."""
+    if ctx.mesh is None:
+        return jax.tree_util.tree_map(lambda _: None, params_shape)
+    n_data = ctx.mesh.shape.get("data", 1)
+
+    def one(kp, leaf):
+        for i, d in enumerate(leaf.shape):
+            if d % n_data == 0 and d >= n_data:
+                spec = [None] * len(leaf.shape)
+                spec[i] = "data"
+                return NamedSharding(ctx.mesh, P(*spec))
+        return NamedSharding(ctx.mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)

@@ -1,0 +1,1 @@
+from repro.inference.engine import Request, ServeEngine  # noqa: F401

@@ -1,0 +1,110 @@
+"""Batched serving engine: request queue → bucketed admission → prefill →
+synchronized decode, with optional DIMA-quantized weights.
+
+Batching model: *bucketed static batching* — requests are grouped by
+prompt length (bucket = rounded-up length), each bucket decodes in
+lockstep sharing one scalar position.  This matches the dry-run's
+`serve_step` contract (one position per batch).  Continuous batching
+(per-slot positions) needs a vmapped per-row cache write — sketched in
+the docstring of `step_decode` as future work; the rest of the engine
+(queue, slots, accounting) is already shaped for it.
+
+Energy accounting: every generated token is priced by the DIMA multi-bank
+model when quantized weights are in use (launch/serve.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (S,) int32 token ids
+    max_new: int = 16
+    out: list = field(default_factory=list)
+    submitted_at: float = field(default_factory=time.time)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, bucket: int = 32, max_batch: int = 8,
+                 max_len: int = 512, dima=None):
+        self.model = model
+        self.params = params
+        self.bucket = bucket
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.dima = dima
+        self.queue: list[Request] = []
+        self.stats = {"requests": 0, "tokens": 0, "batches": 0}
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, c, pos, tokens=t,
+                                                   dima=dima))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+        self.stats["requests"] += 1
+
+    def _take_bucket(self):
+        """Group queued requests by padded prompt length."""
+        if not self.queue:
+            return None, []
+        buckets = {}
+        for r in self.queue:
+            blen = -(-len(r.prompt) // self.bucket) * self.bucket
+            buckets.setdefault(blen, []).append(r)
+        blen, reqs = max(buckets.items(), key=lambda kv: len(kv[1]))
+        take = reqs[: self.max_batch]
+        for r in take:
+            self.queue.remove(r)
+        return blen, take
+
+    def run_once(self):
+        """Admit one bucket, prefill, decode to completion. Returns the
+        completed requests (empty when the queue is empty)."""
+        blen, reqs = self._take_bucket()
+        if not reqs:
+            return []
+        B = len(reqs)
+        gen = max(r.max_new for r in reqs)
+        # right-align prompts in the bucket by repeating the first token
+        # (same positions for all; extra prefix tokens are the request's
+        # own, so no cross-contamination)
+        toks = np.zeros((B, blen), np.int32)
+        for i, r in enumerate(reqs):
+            pad = blen - len(r.prompt)
+            toks[i, :pad] = r.prompt[0]
+            toks[i, pad:] = r.prompt
+        toks = jnp.asarray(toks)
+
+        cache = self.model.init_cache(B, min(blen + gen, self.max_len))
+        logits, cache = self.model.prefill(self.params, cache, tokens=toks,
+                                           dima=self.dima)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        for i, r in enumerate(reqs):
+            r.out.append(int(nxt[i]))
+        for t in range(gen - 1):
+            logits, cache = self._decode(self.params, cache, nxt[:, None],
+                                         jnp.asarray(blen + t, jnp.int32))
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            for i, r in enumerate(reqs):
+                if len(r.out) < r.max_new:
+                    r.out.append(int(nxt[i]))
+        for r in reqs:
+            r.done = True
+        self.stats["tokens"] += sum(len(r.out) for r in reqs)
+        self.stats["batches"] += 1
+        return reqs
+
+    def run(self):
+        done = []
+        while self.queue:
+            done.extend(self.run_once())
+        return done

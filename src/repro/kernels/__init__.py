@@ -1,0 +1,3 @@
+from repro.kernels.ops import (  # noqa: F401
+    dima_dp_banked, dima_md_banked, flash_attention_gqa, subrange_matmul,
+)

@@ -1,0 +1,107 @@
+"""Pallas kernel: the DIMA DP-mode analog pipeline (MR-FR → BLP capacitive
+multiply → CBLP charge share → ADC) for a block of stored rows against one
+streamed query.
+
+This is the *simulation* kernel (used by the banked Monte-Carlo accuracy
+studies, where millions of analog ops dominate wall time): the full
+transfer-function + mismatch + noise math runs vectorized on (BM, 256)
+tiles in VMEM.  Noise is an explicit operand — kernels must be
+deterministic — and the jnp oracle is kernels/ref.py::dima_dp_ref.
+
+Grid: (M/BM,).  Lane layout: the 128 columns of one access cycle sit on
+the 128-lane axis; the two sub-range cycles stack on sublanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.params import DimaParams
+
+BM = 128
+
+
+def _make_kernel(p: DimaParams):
+    def kernel(d_ref, q_ref, cg_ref, ce_ref, mg_ref, mo_ref, rn_ref,
+               cn_ref, vr_ref, code_ref, volt_ref):
+        d = d_ref[...].astype(jnp.int32).reshape(BM, 2, 128)
+        q = q_ref[...].astype(jnp.int32).reshape(2, 128)
+
+        # MR-FR: PWM transfer per 4-b sub-word + 16:1 sub-range merge
+        m = ((d >> 4) & 0xF).astype(jnp.float32)
+        l = (d & 0xF).astype(jnp.float32)
+        vm = p.delta_v_lsb * m * (1.0 - p.inl_beta * m)
+        vl = p.delta_v_lsb * l * (1.0 - p.inl_beta * l)
+        r = 16.0 * (1.0 + ce_ref[...])              # trim-cap ratio error
+        v_word = (r * vm + vl) / (r + 1.0)
+        v_word = v_word * cg_ref[...] + rn_ref[...]
+
+        # BLP: two parallel 4-b capacitive multipliers (P sub-ranged)
+        pm = ((q >> 4) & 0xF).astype(jnp.float32)
+        plo = (q & 0xF).astype(jnp.float32)
+        mg = mg_ref[...]
+        mo = mo_ref[...]
+        rail_m = v_word * (pm / 16.0) * (1.0 - p.mult_beta * pm) * mg[0] \
+            + mo[0] * (pm > 0)
+        rail_l = v_word * (plo / 16.0) * (1.0 - p.mult_beta * plo) * mg[1] \
+            + mo[1] * (plo > 0)
+
+        # CBLP: column charge-share (mean), cycle merge, 16:1 rail merge
+        cn = cn_ref[...]                             # (BM, 2, 2)
+        vmr = jnp.mean(rail_m, axis=2) + cn[:, :, 0]  # (BM, 2)
+        vlr = jnp.mean(rail_l, axis=2) + cn[:, :, 1]
+        v = (16.0 * jnp.mean(vmr, axis=1) + jnp.mean(vlr, axis=1)) / 17.0
+
+        # ADC (8-b single-slope)
+        vr = vr_ref[...]
+        full = float(2 ** p.adc_bits - 1)
+        x = (v - vr[0, 0]) / jnp.maximum(vr[0, 1] - vr[0, 0], 1e-9)
+        code_ref[...] = jnp.clip(jnp.round(x * full), 0, full).astype(jnp.int32)
+        volt_ref[...] = v
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("params", "interpret"))
+def dima_dp(d, q, col_gain, cap_eps, mult_gain, mult_off, read_noise,
+            cblp_noise, v_range, *, params: DimaParams = DimaParams(),
+            interpret=None):
+    """d (M,256) uint8; q (256,) uint8; chip arrays (…,128); read_noise
+    (M,2,128); cblp_noise (M,2,2); v_range (1,2) f32.
+    Returns (codes (M,) int32, volts (M,) f32)."""
+    M = d.shape[0]
+    assert M % BM == 0, M
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    grid = (M // BM,)
+    codes, volts = pl.pallas_call(
+        _make_kernel(params),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, 256), lambda i: (i, 0)),
+            pl.BlockSpec((1, 256), lambda i: (0, 0)),
+            pl.BlockSpec((1, 128), lambda i: (0, 0)),
+            pl.BlockSpec((1, 128), lambda i: (0, 0)),
+            pl.BlockSpec((2, 128), lambda i: (0, 0)),
+            pl.BlockSpec((2, 128), lambda i: (0, 0)),
+            pl.BlockSpec((BM, 2, 128), lambda i: (i, 0, 0)),
+            pl.BlockSpec((BM, 2, 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BM,), lambda i: (i,)),
+            pl.BlockSpec((BM,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M,), jnp.int32),
+            jax.ShapeDtypeStruct((M,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(d, q.reshape(1, 256), col_gain.reshape(1, 128),
+      cap_eps.reshape(1, 128), mult_gain, mult_off, read_noise,
+      cblp_noise, v_range)
+    return codes, volts

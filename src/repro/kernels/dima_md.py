@@ -1,0 +1,98 @@
+"""Pallas kernel: DIMA MD-mode (Manhattan distance) analog pipeline.
+
+Dual-rail functional read — BL develops f(D + P̄), BLB the complementary
+f(D̄ + P) — comparator + mux pick the deeper swing, CBLP averages, ADC
+converts.  Oracle: kernels/ref.py::dima_md_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.params import DimaParams
+
+BM = 128
+
+
+def _transfer(c, p, beta):
+    return p.delta_v_lsb * c * (1.0 - beta * c)
+
+
+def _make_kernel(p: DimaParams):
+    beta = p.md_inl_beta
+
+    def kernel(d_ref, q_ref, cg_ref, ce_ref, cmp_ref, rn_ref, rnb_ref,
+               cn_ref, vr_ref, code_ref, volt_ref):
+        d = d_ref[...].astype(jnp.int32).reshape(BM, 2, 128)
+        q = q_ref[...].astype(jnp.int32).reshape(2, 128)
+        cg = cg_ref[...]
+        r = 16.0 * (1.0 + ce_ref[...])
+
+        def read(words, rep, noise):
+            m = ((words >> 4) & 0xF).astype(jnp.float32) \
+                + ((rep >> 4) & 0xF).astype(jnp.float32)
+            l = (words & 0xF).astype(jnp.float32) \
+                + (rep & 0xF).astype(jnp.float32)
+            vm = _transfer(m, p, beta)
+            vl = _transfer(l, p, beta)
+            return ((r * vm + vl) / (r + 1.0)) * cg + noise
+
+        v_bl = read(d, 255 - q, rn_ref[...])         # f(D + P̄)
+        v_blb = read(255 - d, q, rnb_ref[...])       # f(D̄ + P)
+        vref = (16.0 * _transfer(jnp.float32(15.0), p, beta)
+                + _transfer(jnp.float32(15.0), p, beta)) / 17.0
+        pick = (v_bl + cmp_ref[...]) >= v_blb
+        v_abs = jnp.maximum(jnp.where(pick, v_bl, v_blb) - vref, 0.0)
+
+        v = jnp.mean(v_abs, axis=2) + cn_ref[...]    # (BM, 2)
+        v = jnp.mean(v, axis=1)
+
+        vr = vr_ref[...]
+        full = float(2 ** p.adc_bits - 1)
+        x = (v - vr[0, 0]) / jnp.maximum(vr[0, 1] - vr[0, 0], 1e-9)
+        code_ref[...] = jnp.clip(jnp.round(x * full), 0, full).astype(jnp.int32)
+        volt_ref[...] = v
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("params", "interpret"))
+def dima_md(d, q, col_gain, cap_eps, cmp_noise, read_noise, read_noise_b,
+            cblp_noise, v_range, *, params: DimaParams = DimaParams(),
+            interpret=None):
+    """d (M,256) uint8; q (256,); cmp/read noise (M,2,128); cblp (M,2);
+    v_range (1,2).  Returns (codes (M,), volts (M,))."""
+    M = d.shape[0]
+    assert M % BM == 0, M
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    codes, volts = pl.pallas_call(
+        _make_kernel(params),
+        grid=(M // BM,),
+        in_specs=[
+            pl.BlockSpec((BM, 256), lambda i: (i, 0)),
+            pl.BlockSpec((1, 256), lambda i: (0, 0)),
+            pl.BlockSpec((1, 128), lambda i: (0, 0)),
+            pl.BlockSpec((1, 128), lambda i: (0, 0)),
+            pl.BlockSpec((BM, 2, 128), lambda i: (i, 0, 0)),
+            pl.BlockSpec((BM, 2, 128), lambda i: (i, 0, 0)),
+            pl.BlockSpec((BM, 2, 128), lambda i: (i, 0, 0)),
+            pl.BlockSpec((BM, 2), lambda i: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BM,), lambda i: (i,)),
+            pl.BlockSpec((BM,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M,), jnp.int32),
+            jax.ShapeDtypeStruct((M,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(d, q.reshape(1, 256), col_gain.reshape(1, 128),
+      cap_eps.reshape(1, 128), cmp_noise, read_noise, read_noise_b,
+      cblp_noise, v_range)
+    return codes, volts

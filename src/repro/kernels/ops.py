@@ -1,0 +1,125 @@
+"""Public jit'd wrappers around the Pallas kernels: padding to tile
+multiples, activation quantization, GQA head-folding, chip-record /
+key-based noise expansion — so callers never see BlockSpec details.
+
+On CPU (this container) kernels run in interpret mode; on TPU they lower
+natively.  Every op has a jnp oracle in ref.py and an allclose test.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.params import DimaParams
+from repro.kernels import ref as ref_mod
+from repro.kernels.dima_dp import dima_dp as _dima_dp_kernel
+from repro.kernels.dima_md import dima_md as _dima_md_kernel
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.subrange_matmul import subrange_matmul as _subrange_kernel
+
+
+def _pad_to(x, mult, axis):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def subrange_matmul(x, w_rec, *, interpret=None):
+    """x: (..., K) float; w_rec from quant.subrange.quantize_weight (w8).
+    Quantizes activations per-row to int8 and runs the w8a8 kernel."""
+    assert "q" in w_rec, "kernel path is w8 (two 4-b planes)"
+    orig_shape = x.shape
+    K = x.shape[-1]
+    N = w_rec["q"].shape[-1]
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    xq, xs = ref_mod.quantize_act_ref(x2)
+    xq = _pad_to(_pad_to(xq, 128, 0), 128, 1)
+    xs = _pad_to(xs, 128, 0)
+    wq = _pad_to(_pad_to(w_rec["q"], 128, 0), 128, 1)
+    ws = _pad_to(w_rec["scale"].reshape(1, N), 128, 1)
+    y = _subrange_kernel(xq, xs, wq, ws, interpret=interpret)
+    return y[:M, :N].reshape(*orig_shape[:-1], N).astype(x.dtype)
+
+
+def _expand_noise(key, p: DimaParams, M, kind):
+    """Per-read dynamic noise arrays for the analog kernels."""
+    if key is None:
+        z = lambda *s: jnp.zeros(s, jnp.float32)
+        if kind == "dp":
+            return z(M, 2, 128), z(M, 2, 2)
+        return z(M, 2, 128), z(M, 2, 128), z(M, 2, 128), z(M, 2)
+    ks = jax.random.split(key, 4)
+    rd = p.sigma_read_mv * 1e-3
+    cb = p.sigma_cblp_mv * 1e-3
+    if kind == "dp":
+        return (rd * jax.random.normal(ks[0], (M, 2, 128)),
+                cb * jax.random.normal(ks[1], (M, 2, 2)))
+    cm = p.sigma_cmp_off_mv * 1e-3
+    return (cm * jax.random.normal(ks[0], (M, 2, 128)),
+            rd * jax.random.normal(ks[1], (M, 2, 128)),
+            rd * jax.random.normal(ks[2], (M, 2, 128)),
+            cb * jax.random.normal(ks[3], (M, 2)))
+
+
+def _chip_arrays(chip, p: DimaParams):
+    if chip is None:
+        return (jnp.ones((128,)), jnp.zeros((128,)),
+                jnp.ones((2, 128)), jnp.zeros((2, 128)))
+    return (chip["col_gain"], chip["cap_ratio_err"],
+            chip["mult_gain"], chip["mult_off"])
+
+
+def dima_dp_banked(d, q, p: DimaParams = DimaParams(), chip=None, key=None,
+                   v_range=None, interpret=None):
+    """Banked DP: d (M,256) uint8 rows vs one query q (256,).
+    Returns (codes, volts), M padded internally to 128."""
+    M = d.shape[0]
+    dp_ = _pad_to(jnp.asarray(d, jnp.uint8), 128, 0)
+    Mp = dp_.shape[0]
+    cg, ce, mg, mo = _chip_arrays(chip, p)
+    rn, cn = _expand_noise(key, p, Mp, "dp")
+    if v_range is None:
+        from repro.core.pipeline import dp_gain
+        v_range = (0.0, 255.0 * 255.0 * dp_gain(p))
+    vr = jnp.asarray([v_range], jnp.float32)
+    codes, volts = _dima_dp_kernel(dp_, jnp.asarray(q, jnp.uint8), cg, ce,
+                                   mg, mo, rn, cn, vr, params=p,
+                                   interpret=interpret)
+    return codes[:M], volts[:M]
+
+
+def dima_md_banked(d, q, p: DimaParams = DimaParams(), chip=None, key=None,
+                   v_range=None, interpret=None):
+    """Banked MD: d (M,256) rows vs one query. Returns (codes, volts)."""
+    M = d.shape[0]
+    dp_ = _pad_to(jnp.asarray(d, jnp.uint8), 128, 0)
+    Mp = dp_.shape[0]
+    cg, ce, mg, mo = _chip_arrays(chip, p)
+    cmp_n, rn, rnb, cn = _expand_noise(key, p, Mp, "md")
+    if v_range is None:
+        from repro.core.pipeline import md_gain
+        v_range = (0.0, 255.0 * md_gain(p))
+    vr = jnp.asarray([v_range], jnp.float32)
+    codes, volts = _dima_md_kernel(dp_, jnp.asarray(q, jnp.uint8), cg, ce,
+                                   cmp_n, rn, rnb, cn, vr, params=p,
+                                   interpret=interpret)
+    return codes[:M], volts[:M]
+
+
+def flash_attention_gqa(q, k, v, *, interpret=None):
+    """q: (B, S, H, dh); k, v: (B, S, KV, dh); causal.
+    Folds (B, groups) onto the kernel batch axis."""
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, S, dh)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, S, dh)
+    of = _flash_kernel(qf, kf, vf, interpret=interpret)
+    return of.reshape(B, H, S, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,123 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+The DIMA refs take *explicit* noise arrays (kernels must be bitwise-
+reproducible); tests separately verify that with zero noise they match
+``repro.core.pipeline`` exactly, closing the loop kernel ↔ ref ↔ paper
+model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.params import DimaParams
+
+
+# ---------------------------------------------------------------------------
+# sub-ranged w8a8 matmul
+# ---------------------------------------------------------------------------
+
+def subrange_matmul_ref(x_q, x_scale, w_q, w_scale):
+    """x_q: (M,K) int8; x_scale: (M,1) f32; w_q: (K,N) uint8 offset-binary;
+    w_scale: (1,N) f32.  y = x_scale·w_scale·(16·x@msb + x@lsb − 128·Σx)."""
+    xi = x_q.astype(jnp.int32)
+    msb = ((w_q >> 4) & 0xF).astype(jnp.int32)
+    lsb = (w_q & 0xF).astype(jnp.int32)
+    ym = xi @ msb
+    yl = xi @ lsb
+    sx = xi.sum(axis=1, keepdims=True)
+    acc = 16 * ym + yl - 128 * sx
+    return acc.astype(jnp.float32) * x_scale * w_scale
+
+
+def quantize_act_ref(x):
+    """bf16/f32 activations -> (int8, per-row scale)."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    s = jnp.maximum(s, 1e-9)
+    q = jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# DIMA analog pipeline (explicit-noise form)
+# ---------------------------------------------------------------------------
+
+def _transfer(c, p: DimaParams, replica: bool):
+    beta = p.md_inl_beta if replica else p.inl_beta
+    return p.delta_v_lsb * c * (1.0 - beta * c)
+
+
+def _mr_fr(words, p, col_gain, cap_eps, read_noise, rep_words=None):
+    """words: (..., 128) int32; returns volts (..., 128)."""
+    m = ((words >> 4) & 0xF).astype(jnp.float32)
+    l = (words & 0xF).astype(jnp.float32)
+    replica = rep_words is not None
+    if replica:
+        m = m + ((rep_words >> 4) & 0xF).astype(jnp.float32)
+        l = l + (rep_words & 0xF).astype(jnp.float32)
+    vm = _transfer(m, p, replica)
+    vl = _transfer(l, p, replica)
+    r = 16.0 * (1.0 + cap_eps)
+    v = (r * vm + vl) / (r + 1.0)
+    return v * col_gain + read_noise
+
+
+def dima_dp_ref(d, q, p: DimaParams, col_gain, cap_eps, mult_gain, mult_off,
+                read_noise, cblp_noise, v_range):
+    """d: (M,256) uint8; q: (256,) uint8; noise: read (M,2,128),
+    cblp (M,2,2); returns (codes (M,) int32, volts (M,) f32)."""
+    M = d.shape[0]
+    d2 = d.astype(jnp.int32).reshape(M, 2, 128)
+    q2 = q.astype(jnp.int32).reshape(2, 128)
+    v_word = _mr_fr(d2, p, col_gain, cap_eps, read_noise)       # (M,2,128)
+    pm = ((q2 >> 4) & 0xF).astype(jnp.float32)
+    pl = (q2 & 0xF).astype(jnp.float32)
+    nl_m = 1.0 - p.mult_beta * pm
+    nl_l = 1.0 - p.mult_beta * pl
+    rail_m = v_word * (pm / 16.0) * nl_m * mult_gain[0] + mult_off[0] * (pm > 0)
+    rail_l = v_word * (pl / 16.0) * nl_l * mult_gain[1] + mult_off[1] * (pl > 0)
+    vm = rail_m.mean(-1) + cblp_noise[:, :, 0]                  # (M,2)
+    vl = rail_l.mean(-1) + cblp_noise[:, :, 1]
+    v = (16.0 * vm.mean(-1) + vl.mean(-1)) / 17.0               # (M,)
+    full = 2 ** p.adc_bits - 1
+    x = (v - v_range[0]) / jnp.maximum(v_range[1] - v_range[0], 1e-9)
+    code = jnp.clip(jnp.round(x * full), 0, full).astype(jnp.int32)
+    return code, v
+
+
+def dima_md_ref(d, q, p: DimaParams, col_gain, cap_eps, cmp_noise,
+                read_noise, read_noise_b, cblp_noise, v_range):
+    """MD mode with the dual-rail (BL/BLB) comparator; shapes as dp_ref,
+    cmp_noise (M,2,128), read_noise_b (M,2,128), cblp (M,2)."""
+    M = d.shape[0]
+    d2 = d.astype(jnp.int32).reshape(M, 2, 128)
+    q2 = q.astype(jnp.int32).reshape(2, 128)
+    v_bl = _mr_fr(d2, p, col_gain, cap_eps, read_noise, rep_words=255 - q2)
+    v_blb = _mr_fr(255 - d2, p, col_gain, cap_eps, read_noise_b, rep_words=q2)
+    m15 = jnp.asarray(15.0)
+    vref = (16.0 * _transfer(m15, p, True) + _transfer(m15, p, True)) / 17.0
+    pick = (v_bl + cmp_noise) >= v_blb
+    v_abs = jnp.maximum(jnp.where(pick, v_bl, v_blb) - vref, 0.0)
+    v = v_abs.mean(-1) + cblp_noise                             # (M,2)
+    v = v.mean(-1)
+    full = 2 ** p.adc_bits - 1
+    x = (v - v_range[0]) / jnp.maximum(v_range[1] - v_range[0], 1e-9)
+    code = jnp.clip(jnp.round(x * full), 0, full).astype(jnp.int32)
+    return code, v
+
+
+# ---------------------------------------------------------------------------
+# flash attention (causal, GQA-flattened: call per kv-group)
+# ---------------------------------------------------------------------------
+
+def flash_attention_ref(q, k, v, causal=True):
+    """q,k,v: (B, S, dh) single head. fp32 softmax."""
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(q.shape[-1])
+    if causal:
+        S = q.shape[1]
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)).astype(q.dtype)

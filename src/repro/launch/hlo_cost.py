@@ -1,0 +1,382 @@
+"""Trip-count-aware cost model over post-SPMD optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE — for a
+scan-over-layers model that undercounts FLOPs/bytes by ~n_layers (verified
+in EXPERIMENTS.md §Dry-run).  This module re-derives the costs from the
+HLO text with the loop structure honored:
+
+  * computations are split and a call graph built: ``while`` edges carry
+    ``known_trip_count`` (body ×n, cond ×n+1), ``fusion`` edges ×1;
+  * FLOPs: every ``dot`` contributes 2·|result|·|contracting dims| (shapes
+    from the per-computation symbol table); transcendental elementwise ops
+    add |result| each;
+  * bytes: for every top-level (non-fused) op with real data movement,
+    operands + result — the standard un-fused HBM-traffic upper bound;
+    fusion internals are skipped (their traffic is the fusion's operands);
+  * collectives: per-op operand bytes (assignment convention) + a ring
+    link-bytes estimate.
+
+All counts are per-device (the HLO is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "c128": 16,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute", "collective-broadcast")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"^((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+)?"
+                    r"([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(.*\)\s*->")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+_TRANSCENDENTAL = {"exponential", "tanh", "log", "rsqrt", "sqrt", "power",
+                   "divide", "logistic", "expm1", "log1p", "cosine", "sine",
+                   "atan2", "erf"}
+_NO_BYTES = {"parameter", "constant", "bitcast", "tuple", "get-tuple-element",
+             "while", "conditional", "call", "after-all", "custom-call",
+             "iota", "partition-id", "replica-id", "bitcast-convert",
+             "reshape", "rng-bit-generator", "rng-get-and-update-state",
+             # bare elementwise at top level fuses into producers/consumers
+             # on TPU — not independent HBM traffic
+             "add", "subtract", "multiply", "divide", "maximum", "minimum",
+             "select", "compare", "convert", "negate", "abs", "and", "or",
+             "not", "xor", "exponential", "tanh", "log", "rsqrt", "sqrt",
+             "power", "logistic", "broadcast", "clamp", "floor", "ceil",
+             "round-nearest-afz", "sign", "is-finite"}
+
+
+def _shapes_of(segment):
+    return _SHAPE_RE.findall(segment)
+
+
+def _nbytes(tokens):
+    total = 0
+    for dt, dims in tokens:
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _nelems(tokens):
+    total = 0
+    for dt, dims in tokens:
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _split_computations(text):
+    comps, cur, name, entry = {}, None, None, None
+    for line in text.splitlines():
+        m = _COMP_HDR.match(line)
+        if m and line.rstrip().endswith("{"):
+            name = m.group(1)
+            cur = []
+            comps[name] = cur
+            if line.lstrip().startswith("ENTRY"):
+                entry = name
+        elif cur is not None:
+            if line.startswith("}"):
+                cur = None
+            else:
+                cur.append(line)
+    return comps, entry
+
+
+class _CompStats:
+    __slots__ = ("flops", "bytes", "trans_elems", "colls", "calls")
+
+    def __init__(self):
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.trans_elems = 0.0
+        self.colls = []          # (op, operand_bytes, link_bytes)
+        self.calls = []          # (callee, multiplier)
+
+
+def _parse_line(line, symtab):
+    """Returns (name, result_tokens, opcode, rest) or None."""
+    m = _DEF_RE.match(line)
+    if not m:
+        return None
+    name, rhs = m.group(1), m.group(2)
+    om = _OP_RE.match(rhs)
+    if not om:
+        return None
+    opcode = om.group(2)
+    paren = rhs.find(f"{opcode}(")
+    result_tokens = _shapes_of(rhs[:paren])
+    symtab[name] = result_tokens
+    rest = rhs[paren:]
+    return name, result_tokens, opcode, rest
+
+
+def _analyze_computation(lines, comps):
+    st = _CompStats()
+    symtab = {}
+    for line in lines:
+        parsed = _parse_line(line, symtab)
+        if parsed is None:
+            continue
+        name, rtoks, opcode, rest = parsed
+
+        # call-graph edges
+        if opcode == "while":
+            wm = _WHILE_RE.search(line)
+            if wm:
+                tm = _TRIP_RE.search(line)
+                trip = int(tm.group(1)) if tm else 1
+                st.calls.append((wm.group(2), trip))
+                st.calls.append((wm.group(1), trip + 1))
+            continue
+        if opcode in ("fusion", "call", "conditional", "map"):
+            for cal in _CALLS_RE.findall(line):
+                if cal in comps:
+                    st.calls.append((cal, 1))
+            if opcode == "conditional":
+                for cal in _OPERAND_RE.findall(line):
+                    if cal in comps:
+                        st.calls.append((cal, 1))
+
+        # collectives
+        base = opcode[:-6] if opcode.endswith("-start") else opcode
+        if base in _COLL_OPS:
+            rbytes = _nbytes(rtoks)
+            if opcode.endswith("-start"):
+                rbytes //= 2
+            gm = _GROUPS_RE.search(line)
+            if gm:
+                g = max(int(gm.group(2)), 1)
+            else:
+                gm = _GROUPS_OLD_RE.search(line)
+                g = len(gm.group(1).split(",")) if gm else 1
+            if base == "all-gather":
+                operand, link = rbytes // g, rbytes * (g - 1) // g
+            elif base == "reduce-scatter":
+                operand, link = rbytes * g, rbytes * (g - 1)
+            elif base == "all-reduce":
+                operand, link = rbytes, 2 * rbytes * (g - 1) // g
+            else:
+                operand = rbytes
+                link = rbytes * (g - 1) // g if g > 1 else rbytes
+            st.colls.append((base, operand, link))
+            st.bytes += _nbytes(rtoks)
+            continue
+
+        # FLOPs: dots
+        if opcode == "dot":
+            ops = _OPERAND_RE.findall(rest[len("dot("):rest.find(")")])
+            cdm = _CDIMS_RE.search(line)
+            contract = 1
+            if ops and cdm and ops[0] in symtab:
+                lhs = symtab[ops[0]]
+                if lhs:
+                    dt, dims = lhs[0]
+                    dims = [int(d) for d in dims.split(",") if d]
+                    for ci in cdm.group(1).split(","):
+                        if ci and int(ci) < len(dims):
+                            contract *= dims[int(ci)]
+            st.flops += 2.0 * _nelems(rtoks) * contract
+
+        if opcode in _TRANSCENDENTAL:
+            st.trans_elems += _nelems(rtoks)
+
+        # bytes: operands + result for data-moving top-level ops
+        if opcode not in _NO_BYTES:
+            b = _nbytes(rtoks)
+            arglist = rest[rest.find("(") + 1:]
+            depth = 1
+            end = 0
+            for i, ch in enumerate(arglist):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            operands = _OPERAND_RE.findall(arglist[:end])
+            if opcode == "fusion":
+                cal = _CALLS_RE.search(line)
+                callee = comps.get(cal.group(1)) if cal else None
+                dus_bytes = _dus_rooted_fusion_bytes(callee)
+                if dus_bytes is not None:
+                    # in-place carry update (input/output aliased on TPU):
+                    # traffic = RMW of the update region only
+                    b = dus_bytes
+                else:
+                    b += _fusion_operand_bytes(operands, symtab, callee)
+            elif opcode == "dynamic-update-slice":
+                # in-place RMW: traffic = 2× the update region
+                upd = operands[1] if len(operands) > 1 else None
+                b = _nbytes(rtoks) * 0 + 2 * _nbytes(symtab.get(upd, ()))
+            elif opcode == "dynamic-slice":
+                b = 2 * _nbytes(rtoks)        # read slice + write result
+            else:
+                for opname in operands:
+                    b += _nbytes(symtab.get(opname, ()))
+            st.bytes += b
+    return st
+
+
+def _dus_rooted_fusion_bytes(callee_lines):
+    """If the fused computation's ROOT (through convert/copy/bitcast
+    wrappers — XLA CPU emulates bf16 in f32, inserting converts that a TPU
+    build doesn't have) is a dynamic-update-slice, the fusion is a
+    while-carry in-place update: the full-size result aliases the input
+    buffer and only the update region moves.
+    Returns ≈4×update_region bytes (RMW + the select path), else None."""
+    if callee_lines is None:
+        return None
+    inner_sym = {}
+    defs = {}
+    root_name = None
+    for line in callee_lines:
+        p = _parse_line(line, inner_sym)
+        if p is None:
+            continue
+        nm, rtoks, opcode, rest = p
+        argseg = rest[rest.find("(") + 1:]
+        ops = _OPERAND_RE.findall(argseg.split(")")[0])
+        defs[nm] = (opcode, ops)
+        if line.lstrip().startswith("ROOT"):
+            root_name = nm
+    node = root_name
+    for _ in range(6):                      # unwrap converts/copies
+        if node not in defs:
+            return None
+        opcode, ops = defs[node]
+        if opcode == "dynamic-update-slice":
+            upd = ops[1] if len(ops) > 1 else None
+            return 4 * _nbytes(inner_sym.get(upd, ()))
+        if opcode in ("convert", "copy", "bitcast") and ops:
+            node = ops[0]
+            continue
+        return None
+    return None
+
+
+def _fusion_operand_bytes(operands, symtab, callee_lines):
+    """Bytes read by a fusion: a parameter consumed ONLY through
+    dynamic-slice / dynamic-update-slice inside the fused computation only
+    touches the sliced region (the KV-cache pattern), not the whole array."""
+    if callee_lines is None:
+        return sum(_nbytes(symtab.get(o, ())) for o in operands)
+    # map parameter index -> set of (use opcode, result tokens)
+    param_name = {}
+    inner_sym = {}
+    uses = defaultdict(list)
+    for line in callee_lines:
+        p = _parse_line(line, inner_sym)
+        if p is None:
+            continue
+        nm, rtoks, opcode, rest = p
+        if opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", line)
+            if m:
+                param_name[nm] = int(m.group(1))
+            continue
+        argseg = rest[rest.find("(") + 1:]
+        inner_ops = _OPERAND_RE.findall(argseg.split(")")[0])
+        for pos, opname in enumerate(inner_ops):
+            if opname in param_name:
+                if opcode == "dynamic-update-slice" and pos == 0:
+                    # RMW on the target: traffic = 2× the update region
+                    upd = inner_ops[1] if len(inner_ops) > 1 else None
+                    toks = inner_sym.get(upd, ())
+                    uses[param_name[opname]].append(("dus-target", toks))
+                else:
+                    uses[param_name[opname]].append((opcode, rtoks))
+    total = 0
+    for i, opname in enumerate(operands):
+        full = _nbytes(symtab.get(opname, ()))
+        u = uses.get(i)
+        if u and all(op in ("dynamic-slice", "dus-target") for op, _ in u):
+            sliced = 0
+            for op, toks in u:
+                sliced += (2 if op == "dus-target" else 1) * _nbytes(toks)
+            total += min(full, sliced)
+        else:
+            total += full
+    return total
+
+
+def analyze_hlo(text):
+    comps, entry = _split_computations(text)
+
+    # computations reached via fusion calls: flops counted, bytes skipped
+    fused = set()
+    for lines in comps.values():
+        for line in lines:
+            if " fusion(" in line:
+                for cal in _CALLS_RE.findall(line):
+                    fused.add(cal)
+
+    stats = {n: _analyze_computation(l, comps) for n, l in comps.items()}
+
+    mult = defaultdict(float)
+
+    def visit(name, m, depth=0):
+        if depth > 60 or name not in stats:
+            return
+        mult[name] += m
+        for callee, trip in stats[name].calls:
+            visit(callee, m * trip, depth + 1)
+
+    if entry:
+        visit(entry, 1.0)
+    else:
+        for n in stats:
+            mult[n] = 1.0
+
+    flops = bytes_ = trans = 0.0
+    colls = {op: {"count": 0, "operand_bytes": 0, "link_bytes": 0}
+             for op in _COLL_OPS}
+    for name, st in stats.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        flops += m * st.flops
+        trans += m * st.trans_elems
+        if name not in fused:
+            bytes_ += m * st.bytes
+        for op, operand, link in st.colls:
+            colls[op]["count"] += int(m)
+            colls[op]["operand_bytes"] += int(m * operand)
+            colls[op]["link_bytes"] += int(m * link)
+    colls["total_bytes"] = sum(v["operand_bytes"] for v in colls.values()
+                               if isinstance(v, dict))
+    colls["total_link_bytes"] = sum(v["link_bytes"] for v in colls.values()
+                                    if isinstance(v, dict))
+    return {
+        "flops": flops,
+        "transcendental_elems": trans,
+        "bytes": bytes_,
+        "collectives": colls,
+    }

@@ -1,0 +1,51 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` covers the data inputs; params / optimizer /
+cache specs come from ``jax.eval_shape`` over the corresponding init
+functions.  [vlm]/[audio] archs receive precomputed frontend embeddings
+per the assignment (modality frontend is a stub).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.mode == "train":
+        specs = {"labels": SDS((B, S), jnp.int32)}
+        if cfg.external_embed:
+            specs["embeds"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+        else:
+            specs["tokens"] = SDS((B, S), jnp.int32)
+        return specs
+    if shape.mode == "prefill":
+        if cfg.external_embed:
+            return {"embeds": SDS((B, S, cfg.d_model), jnp.bfloat16)}
+        return {"tokens": SDS((B, S), jnp.int32)}
+    # decode: one new token against a seq_len-deep cache
+    if cfg.external_embed:
+        return {"embeds": SDS((B, 1, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": SDS((B, 1), jnp.int32)}
+
+
+def cache_specs(model, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+
+
+def param_specs(model):
+    return model.init_shapes()
+
+
+def param_specs_bf16(model):
+    """Serving stores weights in bf16."""
+    shapes = model.init_shapes()
+    return jax.tree_util.tree_map(
+        lambda s: SDS(s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+        shapes)

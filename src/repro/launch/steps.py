@@ -1,0 +1,81 @@
+"""Step functions: the jit roots for training and serving.
+
+``make_train_step`` supports gradient-accumulation microbatching and the
+int8 error-feedback gradient-compression path (run.grad_compression, see
+distributed/compression.py).  ``make_decode_step`` is the ``serve_step``
+lowered by the decode_* / long_* dry-run cells.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+from repro.optim import adamw_update, cosine_schedule
+
+
+def make_train_step(model, run: RunConfig):
+    def loss_fn(params, batch):
+        loss, parts = model.loss(params, batch)
+        return loss, parts
+
+    def train_step(params, opt_state, batch):
+        if run.microbatches > 1:
+            mb = run.microbatches
+
+            def split(x):
+                return x.reshape(mb, x.shape[0] // mb, *x.shape[1:])
+
+            mbatch = jax.tree_util.tree_map(split, batch)
+
+            def acc(carry, b):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, b)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, x: a + x.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(acc, (g0, 0.0), mbatch)
+            grads = jax.tree_util.tree_map(lambda g: g / mb, grads)
+            loss = loss / mb
+            parts = {"ce": loss, "aux": jnp.zeros(())}
+        else:
+            (loss, parts), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+
+        lr = cosine_schedule(opt_state["step"], run.learning_rate,
+                             run.warmup_steps, run.total_steps)
+        params, opt_state, om = adamw_update(
+            params, grads, opt_state, lr=lr, b1=run.b1, b2=run.b2,
+            eps=run.eps, weight_decay=run.weight_decay,
+            grad_clip=run.grad_clip)
+        metrics = {"loss": loss, "lr": lr, **parts, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model, dima=None):
+    def prefill_step(params, cache, batch):
+        logits, cache = model.prefill(
+            params, cache, tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"), dima=dima)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return prefill_step
+
+
+def make_decode_step(model, dima=None):
+    """serve_step: one new token for every sequence in the batch."""
+
+    def decode_step(params, cache, batch, pos):
+        logits, cache = model.decode_step(
+            params, cache, pos, tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"), dima=dima)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return decode_step

@@ -1,0 +1,224 @@
+"""GQA attention: chunked-flash (train/prefill) + cache decode.
+
+Distribution: *sequence parallel / context parallel* — the query-chunk dim
+is sharded on 'model' (uniform across archs, so head counts that don't
+divide the 16-way model axis never matter); K/V are gathered per layer
+(cheap under GQA).  Decode shards the KV cache on the sequence dim, which
+GSPMD turns into flash-decoding (local partial softmax + small
+all-reduces).  See DESIGN.md §6.
+
+Never materializes an (S, S) score tensor: online softmax over KV chunks
+with fp32 accumulators.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import ShardCtx
+from repro.models.layers import apply_rope, dense_init, matmul
+
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+def init_attn(key, cfg):
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (d, qd)),
+        "wk": dense_init(k2, (d, kvd)),
+        "wv": dense_init(k3, (d, kvd)),
+        "wo": dense_init(k4, (qd, d)),
+    }
+
+
+def _pick_chunks(sq, skv, n_model_shards):
+    """Chunk sizes: q chunks must be shardable on 'model'; kv chunk bounds
+    the fp32 score buffer."""
+    qc = sq
+    for cand in (1024, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if sq % cand == 0 and (sq // cand) % max(n_model_shards, 1) == 0:
+            qc = cand
+            break
+        if sq % cand == 0 and sq // cand >= 1 and n_model_shards <= 1:
+            qc = cand
+            break
+    kvc = 512
+    while skv % kvc != 0:
+        kvc //= 2
+    return qc, max(kvc, 1)
+
+
+def flash_attention(q, k, v, *, cfg, ctx: ShardCtx, window=0, q_offset=0):
+    """q: (B, Sq, H, dh); k, v: (B, Skv, KV, dh). Causal. window<=0 -> full.
+    ``window`` may be a traced scalar (gemma3 per-layer local/global)."""
+    B, Sq, H, dh = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    shards = ctx.mesh.shape.get("model", 1) if ctx.mesh is not None else 1
+    qc, kvc = _pick_chunks(Sq, Skv, shards)
+    nq, nkv = Sq // qc, Skv // kvc
+    scale = 1.0 / np.sqrt(dh)
+
+    q5 = q.reshape(B, nq, qc, KV, G, dh)
+    q5 = ctx.sc(q5, "batch", "seq", None, None, None, None)
+    k = ctx.sc(k, "batch", None, None, None)   # gathered K/V
+    v = ctx.sc(v, "batch", None, None, None)
+
+    qpos = q_offset + jnp.arange(Sq, dtype=jnp.int32).reshape(nq, qc)
+    win = jnp.asarray(window, dtype=jnp.int32)
+
+    def body(carry, j):
+        acc, m, l = carry
+        kj = jax.lax.dynamic_slice_in_dim(k, j * kvc, kvc, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * kvc, kvc, axis=1)
+        s = jnp.einsum("bnqkgd,bckd->bnqkgc", q5, kj,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = j * kvc + jnp.arange(kvc, dtype=jnp.int32)
+        dq = qpos[:, :, None]                                   # (nq, qc, 1)
+        dk = kpos[None, None, :]                                # (1, 1, kvc)
+        mask = dk <= dq
+        mask = jnp.logical_and(mask, jnp.where(win > 0, dq - dk < win, True))
+        s = jnp.where(mask[None, :, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bnqkgc,bckd->bnqkgd", p.astype(vj.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, nq, qc, KV, G, dh), jnp.float32)
+    m0 = jnp.full((B, nq, qc, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, nq, qc, KV, G), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), jnp.arange(nkv))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, cfg, ctx: ShardCtx, pos, window=0):
+    """q: (B, 1, H, dh); caches: (B, Smax, KV, dh) sharded on seq.
+    ``pos`` scalar int32 = index of the new token (cache already updated)."""
+    B, _, H, dh = q.shape
+    Smax, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(dh)
+    qg = q.reshape(B, KV, G, dh)
+
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(Smax, dtype=jnp.int32)
+    win = jnp.asarray(window, dtype=jnp.int32)
+    mask = kpos <= pos
+    mask = jnp.logical_and(mask, jnp.where(win > 0, pos - kpos < win, True))
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+def _cache_write(cache, name, val, pos_or_zero, axis_or_full):
+    """Write into a (possibly int8-quantized) KV cache.
+
+    int8 caches (DESIGN.md §3: DIMA's 8-b storage applied to the cache)
+    carry a per-(token, kv-head) scale next to the codes:
+      {"k": int8 (B,S,KV,dh), "k_scale": f32 (B,S,KV), ...}
+    """
+    arr = cache[name]
+    if arr.dtype == jnp.int8:
+        s = jnp.max(jnp.abs(val.astype(jnp.float32)), axis=-1) / 127.0 + 1e-9
+        q = jnp.clip(jnp.round(val.astype(jnp.float32) / s[..., None]),
+                     -127, 127).astype(jnp.int8)
+        if axis_or_full == "full":
+            arr = jax.lax.dynamic_update_slice_in_dim(arr, q, 0, axis=1)
+            sc = jax.lax.dynamic_update_slice_in_dim(
+                cache[f"{name}_scale"], s.astype(jnp.float32), 0, axis=1)
+        else:
+            arr = jax.lax.dynamic_update_slice(arr, q, (0, pos_or_zero, 0, 0))
+            sc = jax.lax.dynamic_update_slice(
+                cache[f"{name}_scale"], s.astype(jnp.float32),
+                (0, pos_or_zero, 0))
+        return {name: arr, f"{name}_scale": sc}
+    if axis_or_full == "full":
+        arr = jax.lax.dynamic_update_slice_in_dim(
+            arr, val.astype(arr.dtype), 0, axis=1)
+    else:
+        arr = jax.lax.dynamic_update_slice(
+            arr, val.astype(arr.dtype), (0, pos_or_zero, 0, 0))
+    return {name: arr}
+
+
+def _cache_read(cache, name, dtype):
+    arr = cache[name]
+    if arr.dtype == jnp.int8:
+        return (arr.astype(jnp.float32)
+                * cache[f"{name}_scale"][..., None]).astype(dtype)
+    return arr
+
+
+def attn_block(x, p, *, cfg, ctx: ShardCtx, window, cache=None, pos=None,
+               dtype=jnp.bfloat16, dima=None):
+    """Full attention sub-layer (projections + RoPE + attention).
+
+    cache: None (train) or {"k","v"[, "k_scale","v_scale"]}.
+    Returns (y, new_cache).
+    """
+    B, S, d = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    q = matmul(x, p["wq"], dtype, dima).reshape(B, S, H, dh)
+    k = matmul(x, p["wk"], dtype, dima).reshape(B, S, KV, dh)
+    v = matmul(x, p["wv"], dtype, dima).reshape(B, S, KV, dh)
+
+    if cache is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+        rope_kw = dict(fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+        q = apply_rope(q, positions, **rope_kw)
+        k = apply_rope(k, positions, **rope_kw)
+        o = flash_attention(q, k, v, cfg=cfg, ctx=ctx, window=window)
+        new_cache = None
+    elif S > 1:  # prefill: fill cache rows [0, S)
+        positions = jnp.arange(S, dtype=jnp.int32)
+        rope_kw = dict(fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+        q = apply_rope(q, positions, **rope_kw)
+        k = apply_rope(k, positions, **rope_kw)
+        o = flash_attention(q, k, v, cfg=cfg, ctx=ctx, window=window)
+        new_cache = {**_cache_write(cache, "k", k, 0, "full"),
+                     **_cache_write(cache, "v", v, 0, "full")}
+        new_cache = {kk: _csc2(vv, ctx) for kk, vv in new_cache.items()}
+    else:        # decode: write position ``pos`` then attend over the cache
+        positions = jnp.full((1,), pos, dtype=jnp.int32)
+        rope_kw = dict(fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+        q = apply_rope(q, positions, **rope_kw)
+        k = apply_rope(k, positions, **rope_kw)
+        new_cache = {**_cache_write(cache, "k", k, pos, "pos"),
+                     **_cache_write(cache, "v", v, pos, "pos")}
+        new_cache = {kk: _csc2(vv, ctx) for kk, vv in new_cache.items()}
+        kc = _cache_read(new_cache, "k", dtype)
+        vc = _cache_read(new_cache, "v", dtype)
+        o = decode_attention(q, kc, vc, cfg=cfg, ctx=ctx, pos=pos, window=window)
+
+    y = matmul(o.reshape(B, S, H * dh), p["wo"], dtype, dima)
+    return ctx.sc(y, "batch", "seq", None), new_cache
+
+
+def _csc(c, ctx):
+    return ctx.sc(c, "batch", "seq", None, None)
+
+
+def _csc2(c, ctx):
+    dims = ["batch", "seq"] + [None] * (c.ndim - 2)
+    return ctx.sc(c, *dims)
+
+
+def init_cache_attn(cfg, batch, max_len, dtype=jnp.bfloat16):
+    KV, dh = cfg.n_kv_heads, cfg.head_dim
+    z = jnp.zeros((batch, max_len, KV, dh), dtype)
+    c = {"k": z, "v": z}
+    if dtype == jnp.int8:
+        s = jnp.zeros((batch, max_len, KV), jnp.float32)
+        c.update({"k_scale": s, "v_scale": s})
+    return c

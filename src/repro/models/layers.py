@@ -1,0 +1,128 @@
+"""Shared building blocks: init helpers, norms, RoPE, embeddings, SwiGLU FFN.
+
+All forward code is written against *global* shapes; distribution happens
+through ``ShardCtx.sc`` sharding constraints + GSPMD propagation.
+Weights live in fp32 (training master copy) and are cast to the compute
+dtype at use; the serve path may hand in bf16 or DIMA-quantized weights.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import ShardCtx
+
+
+def dense_init(key, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape) / np.sqrt(fan_in)).astype(dtype)
+
+
+def cast(w, dtype):
+    """Cast a weight leaf to compute dtype; pass DIMA-quantized weights through."""
+    if isinstance(w, dict):  # quantized weight records are handled by matmul()
+        return w
+    return w.astype(dtype)
+
+
+def matmul(x, w, dtype, dima=None):
+    """x @ w with optional DIMA w4a8 sub-ranged path.
+
+    ``w`` is either a raw array or a quantized record
+    {"msb": int8[(..,ff)], "lsb": int8, "scale": f32[ff]} produced by
+    repro.quant.subrange.quantize_weight.  ``dima`` is a DimaNoiseModel or
+    None (exact sub-ranged arithmetic).
+    """
+    if isinstance(w, dict):
+        from repro.quant.subrange import subrange_matmul_jnp
+
+        return subrange_matmul_jnp(x, w, noise=dima)
+    return x @ w.astype(dtype)
+
+
+def rms_norm(x, w, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim, fraction, theta):
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float64) / rot))
+    return rot, jnp.asarray(inv, dtype=jnp.float32)
+
+
+def apply_rope(x, positions, *, fraction=1.0, theta=10000.0):
+    """x: (..., S, H, dh); positions: broadcastable to (..., S) int32."""
+    dh = x.shape[-1]
+    rot, inv = rope_freqs(dh, fraction, theta)
+    xr, xp = x[..., :rot], x[..., rot:]
+    ang = positions[..., None].astype(jnp.float32) * inv       # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]                           # (..., S, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr.astype(x.dtype), xp], axis=-1) if rot < dh else yr.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg):
+    return {"table": dense_init(key, (cfg.vocab_size, cfg.d_model), fan_in=cfg.d_model)}
+
+
+def embed(params, tokens, cfg, ctx: ShardCtx, dtype):
+    x = jnp.take(params["table"].astype(dtype), tokens, axis=0)
+    return ctx.sc(x, "batch", "seq", None)
+
+
+def lm_logits(x, params, cfg, ctx: ShardCtx, dtype):
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"]
+        if isinstance(w, dict):
+            raise ValueError("tied embeddings cannot be DIMA-quantized")
+        logits = x @ w.astype(dtype).T
+    else:
+        logits = matmul(x, params["lm_head"], dtype)
+    # fp32 + seq-sharded: full-vocab logits never exceed per-chip budget
+    logits = logits.astype(jnp.float32)
+    if logits.ndim == 3:
+        logits = ctx.sc(logits, "batch", "seq", None)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FFN (Megatron-TP: ff dim on 'model', seq-sharded residual)
+# ---------------------------------------------------------------------------
+
+def init_ffn(key, d, ff):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, ff)),
+        "w_up": dense_init(k2, (d, ff)),
+        "w_down": dense_init(k3, (ff, d)),
+    }
+
+
+def ffn(x, p, ctx: ShardCtx, dtype, dima=None):
+    g = matmul(x, p["w_gate"], dtype, dima)
+    u = matmul(x, p["w_up"], dtype, dima)
+    h = jax.nn.silu(g) * u
+    if ctx.variant == "wg_ffn":
+        # weight-gathered: tokens stay seq-sharded; GSPMD all-gathers the
+        # ff-sharded weights (params ≪ activations at large batch)
+        h = ctx.sc(h, "batch", "seq", None)
+    else:
+        h = ctx.sc(h, "batch", None, "ff")
+    y = matmul(h, p["w_down"], dtype, dima)
+    return ctx.sc(y, "batch", "seq", None)

@@ -1,0 +1,80 @@
+"""Public model API: ``LM`` bundles config + sharding context and exposes
+init / forward / loss / prefill / decode, all pure functions of params.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RunConfig
+from repro.distributed.sharding import ShardCtx
+from repro.models import transformer
+
+AUX_WEIGHT = 0.01
+
+
+class LM:
+    def __init__(self, cfg: ArchConfig, run: Optional[RunConfig] = None,
+                 ctx: Optional[ShardCtx] = None):
+        self.cfg = cfg
+        self.run = run or RunConfig()
+        self.ctx = ctx or ShardCtx(mesh=None)
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    # -- params ------------------------------------------------------------
+    def init(self, rng):
+        return transformer.init_params(rng, self.cfg)
+
+    def init_shapes(self, rng=None):
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(lambda r: transformer.init_params(r, self.cfg), rng)
+
+    # -- forward -----------------------------------------------------------
+    def forward(self, params, tokens=None, embeds=None, mode="train",
+                dima=None):
+        logits, _, aux = transformer.apply(
+            params, self.cfg, self.ctx, tokens=tokens, embeds=embeds,
+            mode=mode, remat_policy=self.run.remat_policy, dtype=self.dtype,
+            dima=dima)
+        return logits, aux
+
+    def loss(self, params, batch, dima=None):
+        tokens = batch.get("tokens")
+        embeds = batch.get("embeds")
+        labels = batch["labels"]
+        logits, aux = self.forward(params, tokens=tokens, embeds=embeds,
+                                   mode="train", dima=dima)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        mask = batch.get("mask")
+        if mask is not None:
+            loss = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        else:
+            loss = -ll.mean()
+        return loss + AUX_WEIGHT * aux, {"ce": loss, "aux": aux}
+
+    # -- serving -----------------------------------------------------------
+    def init_cache(self, batch, max_len):
+        kv_dtype = jnp.int8 if self.run.kv_dtype == "int8" else self.dtype
+        return transformer.init_cache(self.cfg, batch, max_len, kv_dtype)
+
+    def prefill(self, params, cache, tokens=None, embeds=None, dima=None):
+        """Fills cache rows [0, S); returns (last-token logits, cache)."""
+        logits, new_cache, _ = transformer.apply(
+            params, self.cfg, self.ctx, tokens=tokens, embeds=embeds,
+            cache=cache, pos=jnp.asarray(0, jnp.int32), mode="prefill",
+            remat_policy=self.run.remat_policy, dtype=self.dtype, dima=dima)
+        return logits[:, -1], new_cache
+
+    def decode_step(self, params, cache, pos, tokens=None, embeds=None,
+                    dima=None):
+        """One token: tokens (B,1) (or embeds (B,1,d)); pos scalar int32 =
+        write index of the new token. Returns (logits (B,V), cache)."""
+        logits, new_cache, _ = transformer.apply(
+            params, self.cfg, self.ctx, tokens=tokens, embeds=embeds,
+            cache=cache, pos=pos, mode="decode",
+            remat_policy=self.run.remat_policy, dtype=self.dtype, dima=dima)
+        return logits[:, -1], new_cache

@@ -1,0 +1,121 @@
+"""RecurrentGemma / Griffin RG-LRU block.  [arXiv:2402.19427]
+
+y = W_out( GeLU(W_gate·x) ⊙ RG-LRU(conv1d(W_x·x)) )
+
+RG-LRU (diagonal, real-gated):
+    r_t = σ(W_a u_t + b_a)        recurrence gate
+    i_t = σ(W_i u_t + b_i)        input gate
+    a_t = exp(−c·softplus(Λ)·r_t) c = 8
+    h_t = a_t ⊙ h_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ u_t)
+
+Training uses ``jax.lax.associative_scan`` over the diagonal recurrence
+(log-space parallel prefix); decode is the single-step update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardCtx
+from repro.models.layers import dense_init, matmul
+
+_C = 8.0
+
+
+def init_rglru(key, cfg):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 7)
+    # Λ init so a ∈ (0.9, 0.999) at r=1 (Griffin's init range)
+    u = jax.random.uniform(ks[6], (w,), minval=0.9, maxval=0.999)
+    log_lambda = jnp.log(jnp.expm1(-jnp.log(u) / _C))   # softplus^-1(−ln a / c)
+    return {
+        "w_x": dense_init(ks[0], (d, w)),
+        "w_gate_branch": dense_init(ks[1], (d, w)),
+        "w_out": dense_init(ks[2], (w, d)),
+        "conv_w": dense_init(ks[3], (cfg.conv_width, w), fan_in=cfg.conv_width),
+        "conv_b": jnp.zeros((w,)),
+        "w_a": dense_init(ks[4], (w, w)),
+        "b_a": jnp.zeros((w,)),
+        "w_i": dense_init(ks[5], (w, w)),
+        "b_i": jnp.zeros((w,)),
+        "log_lambda": log_lambda,
+    }
+
+
+def _conv(u, w, b, conv_state=None):
+    """Causal depthwise conv width W; decode consumes conv_state (B,W-1,w)."""
+    W = w.shape[0]
+    if conv_state is not None:
+        S = u.shape[1]
+        hist = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)
+        # y[t] = Σ_k w[k] · u[t − (W−1−k)]  (w[W−1] taps the current input)
+        y = sum(hist[:, k: k + S, :] * w[k].astype(u.dtype) for k in range(W))
+        return y + b.astype(u.dtype)
+    pads = [jnp.pad(u, ((0, 0), (W - 1 - k, 0), (0, 0)))[:, : u.shape[1], :]
+            if W - 1 - k > 0 else u
+            for k in range(W)]
+    y = sum(pads[k] * w[k].astype(u.dtype) for k in range(W))
+    return y + b.astype(u.dtype)
+
+
+def _gates(u, p):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(uf @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["log_lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    x_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, x_in
+
+
+def rglru_block(x, p, *, cfg, ctx: ShardCtx, cache=None, dtype=jnp.bfloat16,
+                dima=None):
+    """x: (B,S,d) (pre-normed by caller). Returns (y, new_cache)."""
+    B, S, d = x.shape
+    u = matmul(x, p["w_x"], dtype, dima)
+    gate = jax.nn.gelu(matmul(x, p["w_gate_branch"], dtype, dima))
+    u = ctx.sc(u, "batch", None, "ff")
+    gate = ctx.sc(gate, "batch", None, "ff")
+
+    if cache is None or S > 1:
+        c = _conv(u, p["conv_w"], p["conv_b"],
+                  None if cache is None else None)
+        a, x_in = _gates(c, p)
+        # parallel prefix over h_t = a_t h_{t−1} + x_t
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+        if cache is not None:
+            # fold the incoming state into the first step
+            x_in = x_in.at[:, 0].add(a[:, 0] * cache["h"])
+        aa, hh = jax.lax.associative_scan(combine, (a, x_in), axis=1)
+        h = hh
+        new_cache = None
+        if cache is not None:
+            new_cache = {
+                "h": h[:, -1],
+                "conv": u[:, S - (cfg.conv_width - 1):, :].astype(jnp.float32),
+            }
+    else:
+        c = _conv(u, p["conv_w"], p["conv_b"], conv_state=cache["conv"])
+        a, x_in = _gates(c, p)
+        h = a[:, 0] * cache["h"] + x_in[:, 0]
+        new_cache = {
+            "h": h,
+            "conv": jnp.concatenate(
+                [cache["conv"][:, 1:], u.astype(jnp.float32)], axis=1),
+        }
+        h = h[:, None]
+
+    y = matmul(h.astype(dtype) * gate, p["w_out"], dtype, dima)
+    return ctx.sc(y, "batch", "seq", None), new_cache
+
+
+def init_cache_rglru(cfg, batch):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), jnp.float32),
+    }

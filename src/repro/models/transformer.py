@@ -1,0 +1,266 @@
+"""Assembles per-arch decoder stacks from the block zoo.
+
+Three structural families (DESIGN.md §5):
+  * uniform  — every layer is (attn|local)+FFN/MoE with identical param
+               shapes -> single ``lax.scan`` over stacked layer params;
+               local-vs-global is a per-layer window scalar fed as scan xs.
+  * xlstm    — scan over superblocks of (7×mLSTM, 1×sLSTM).
+  * griffin  — python-unrolled heterogeneous (rglru,rglru,local) pattern.
+
+Conventions: ``attn_block``/``ffn``/``rglru_block`` take pre-normed input
+and return the un-residualed branch output; mLSTM/sLSTM blocks are
+self-contained (own norms + residuals).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ATTN, LOCAL, MLSTM, RGLRU, SLSTM
+from repro.distributed.sharding import ShardCtx
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (cast, dense_init, embed, ffn, init_embed,
+                                 init_ffn, lm_logits, rms_norm)
+
+REMAT_POLICIES = {
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    "everything": jax.checkpoint_policies.everything_saveable,
+}
+
+
+def structure(cfg: ArchConfig) -> str:
+    kinds = set(cfg.block_pattern)
+    if kinds <= {ATTN, LOCAL}:
+        return "uniform"
+    if kinds <= {MLSTM, SLSTM}:
+        return "xlstm"
+    return "griffin"
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_uniform_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "norm1": jnp.ones((cfg.d_model,)),
+        "attn": attn_mod.init_attn(k1, cfg),
+        "norm2": jnp.ones((cfg.d_model,)),
+    }
+    if cfg.n_experts > 0:
+        p["moe"] = moe_mod.init_moe(k2, cfg)
+    else:
+        p["ffn"] = init_ffn(k2, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def init_params(rng, cfg: ArchConfig):
+    struct = structure(cfg)
+    keys = jax.random.split(rng, cfg.n_layers + 3)
+    params = {"final_norm": jnp.ones((cfg.d_model,))}
+    if not cfg.external_embed:
+        params["embed"] = init_embed(keys[-1], cfg)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[-2], (cfg.d_model, cfg.vocab_size))
+
+    if struct == "uniform":
+        layers = [_init_uniform_layer(keys[i], cfg) for i in range(cfg.n_layers)]
+        params["layers"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *layers)
+    elif struct == "xlstm":
+        per = len(cfg.block_pattern)           # 8
+        ns = cfg.n_layers // per
+        n_m = sum(1 for k in cfg.block_pattern if k == MLSTM)
+        sbs = []
+        for s in range(ns):
+            mk = jax.random.split(keys[s], n_m + 1)
+            sbs.append({
+                "mlstm": jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs),
+                    *[ssm_mod.init_mlstm(mk[i], cfg) for i in range(n_m)]),
+                "slstm": ssm_mod.init_slstm(mk[-1], cfg),
+            })
+        params["superblocks"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *sbs)
+    else:  # griffin
+        layers = []
+        for i in range(cfg.n_layers):
+            kind = cfg.layer_kind(i)
+            k1, k2 = jax.random.split(keys[i])
+            lp = {"norm1": jnp.ones((cfg.d_model,)),
+                  "norm2": jnp.ones((cfg.d_model,))}
+            if kind == RGLRU:
+                lp["rglru"] = rglru_mod.init_rglru(k1, cfg)
+            else:
+                lp["attn"] = attn_mod.init_attn(k1, cfg)
+            lp["ffn"] = init_ffn(k2, cfg.d_model, cfg.d_ff)
+            layers.append(lp)
+        params["layers"] = layers
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    struct = structure(cfg)
+    if struct == "uniform":
+        one = attn_mod.init_cache_attn(cfg, batch, max_len, dtype)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)
+    if struct == "xlstm":
+        per = len(cfg.block_pattern)
+        ns = cfg.n_layers // per
+        n_m = sum(1 for k in cfg.block_pattern if k == MLSTM)
+        mc = ssm_mod.init_cache_mlstm(cfg, batch, dtype)
+        sc = ssm_mod.init_cache_slstm(cfg, batch)
+        return {
+            "mlstm": jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (ns, n_m) + x.shape), mc),
+            "slstm": jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (ns,) + x.shape), sc),
+        }
+    # griffin
+    caches = []
+    for i in range(cfg.n_layers):
+        if cfg.layer_kind(i) == RGLRU:
+            caches.append(rglru_mod.init_cache_rglru(cfg, batch))
+        else:
+            caches.append(attn_mod.init_cache_attn(cfg, batch, max_len, dtype))
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _window_array(cfg):
+    """Per-layer attention window (0 = full/global)."""
+    return jnp.asarray(
+        [cfg.window if cfg.layer_kind(i) == LOCAL else 0
+         for i in range(cfg.n_layers)], dtype=jnp.int32)
+
+
+def apply(params, cfg: ArchConfig, ctx: ShardCtx, *, tokens=None, embeds=None,
+          cache=None, pos=None, mode="train", remat_policy="nothing",
+          dtype=jnp.bfloat16, dima=None):
+    """Returns (logits_f32, new_cache, aux_loss)."""
+    struct = structure(cfg)
+    if cfg.external_embed:
+        assert embeds is not None, f"{cfg.name} takes frontend embeddings"
+        x = embeds.astype(dtype)
+    else:
+        x = embed(params["embed"], tokens, cfg, ctx, dtype)
+    x = ctx.sc(x, "batch", "seq", None)
+    aux = jnp.zeros((), jnp.float32)
+
+    if struct == "uniform":
+        x, new_cache, aux = _apply_uniform(
+            params, cfg, ctx, x, cache, pos, mode, remat_policy, dtype, dima)
+    elif struct == "xlstm":
+        x, new_cache = _apply_xlstm(
+            params, cfg, ctx, x, cache, mode, remat_policy, dtype, dima)
+    else:
+        x, new_cache, aux = _apply_griffin(
+            params, cfg, ctx, x, cache, pos, mode, remat_policy, dtype, dima)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(x, params, cfg, ctx, dtype)
+    return logits, new_cache, aux
+
+
+def _apply_uniform(params, cfg, ctx, x, cache, pos, mode, remat_policy,
+                   dtype, dima):
+    windows = _window_array(cfg)
+
+    def layer(carry, xs):
+        x, aux = carry
+        lp, window, cache_l = xs
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        h, new_c = attn_mod.attn_block(
+            h, lp["attn"], cfg=cfg, ctx=ctx, window=window,
+            cache=cache_l, pos=pos, dtype=dtype, dima=dima)
+        x = x + h
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        if cfg.n_experts > 0:
+            h, a = moe_mod.moe_ffn(h, lp["moe"], cfg, ctx, dtype, dima)
+            aux = aux + a
+        else:
+            h = ffn(h, lp["ffn"], ctx, dtype, dima)
+        x = ctx.sc(x + h, "batch", "seq", None)
+        return (x, aux), new_c
+
+    if mode == "train":
+        layer = jax.checkpoint(
+            layer, policy=REMAT_POLICIES[remat_policy],
+            prevent_cse=False)
+
+    xs = (params["layers"], windows, cache)
+    (x, aux), new_cache = jax.lax.scan(layer, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, new_cache, aux
+
+
+def _apply_xlstm(params, cfg, ctx, x, cache, mode, remat_policy, dtype,
+                 dima=None):
+    def mlstm_one(x, xs):
+        mp, mc = xs
+        x, nc = ssm_mod.mlstm_block(x, mp, cfg=cfg, ctx=ctx, cache=mc,
+                                    dtype=dtype, dima=dima)
+        return x, nc
+
+    def superblock(x, xs):
+        sbp, sbc = xs
+        x, new_mc = jax.lax.scan(
+            mlstm_one, x, (sbp["mlstm"], None if sbc is None else sbc["mlstm"]))
+        x, new_sc = ssm_mod.slstm_block(x, sbp["slstm"], cfg=cfg, ctx=ctx,
+                                        cache=None if sbc is None else sbc["slstm"],
+                                        dtype=dtype, dima=dima)
+        return x, {"mlstm": new_mc, "slstm": new_sc}
+
+    if mode == "train":
+        superblock = jax.checkpoint(
+            superblock, policy=REMAT_POLICIES[remat_policy], prevent_cse=False)
+
+    x, new_cache = jax.lax.scan(superblock, x, (params["superblocks"], cache))
+    if cache is None:
+        new_cache = None
+    return x, new_cache
+
+
+def _apply_griffin(params, cfg, ctx, x, cache, pos, mode, remat_policy,
+                   dtype, dima):
+    aux = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for i, lp in enumerate(params["layers"]):
+        kind = cfg.layer_kind(i)
+        cache_l = None if cache is None else cache[i]
+
+        def block(x, lp=lp, kind=kind, cache_l=cache_l):
+            h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+            if kind == RGLRU:
+                h, nc = rglru_mod.rglru_block(h, lp["rglru"], cfg=cfg, ctx=ctx,
+                                              cache=cache_l, dtype=dtype,
+                                              dima=dima)
+            else:
+                h, nc = attn_mod.attn_block(
+                    h, lp["attn"], cfg=cfg, ctx=ctx, window=cfg.window,
+                    cache=cache_l, pos=pos, dtype=dtype, dima=dima)
+            x = x + h
+            h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+            h = ffn(h, lp["ffn"], ctx, dtype, dima)
+            return ctx.sc(x + h, "batch", "seq", None), nc
+
+        if mode == "train":
+            block = jax.checkpoint(
+                block, policy=REMAT_POLICIES[remat_policy], prevent_cse=False)
+        x, nc = block(x)
+        new_caches.append(nc)
+    return x, (new_caches if cache is not None else None), aux

@@ -1,0 +1,18 @@
+"""LR schedules as pure functions of the (traced) step."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, base_lr, warmup_steps):
+    s = step.astype(jnp.float32)
+    return base_lr * jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+
+
+def cosine_schedule(step, base_lr, warmup_steps, total_steps, min_ratio=0.1):
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+    prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                    0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * cos

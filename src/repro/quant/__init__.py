@@ -1,0 +1,4 @@
+from repro.quant.subrange import (  # noqa: F401
+    DimaNoiseModel, quantize_weight, dequantize_weight, quantize_params,
+    subrange_matmul_jnp,
+)

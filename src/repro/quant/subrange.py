@@ -1,0 +1,159 @@
+"""Sub-ranged weight quantization — DIMA's storage scheme on TPU.
+
+The chip stores an 8-b word as two 4-b sub-words in a column pair and
+computes on both halves in parallel, merging 16:1 (Fig. 3/4).  The TPU
+mapping (DESIGN.md §3): weights are stored as offset-binary uint8
+(= the packed MSB/LSB nibble pair), unpacked into two 4-b planes at the
+compute site, and the two low-precision dots merge as 16·y_msb + y_lsb —
+halving weight HBM traffic vs bf16, which is exactly the term that
+dominates memory-bound decode.
+
+``w4`` mode keeps only the MSB plane (a true 4-bit weight— the
+beyond-paper extension; 4× traffic reduction, coarser accuracy).
+
+The optional ``DimaNoiseModel`` injects the analog pipeline's error at
+tensor level (per-256-group gaussian + 8-b "ADC" output quantization),
+enabling the paper's energy↔accuracy tradeoff (Fig. 5) on LM workloads.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class DimaNoiseModel:
+    """Tensor-level surrogate of the analog error (calibrated in
+    tests/test_dima_lm_integration.py against core.pipeline)."""
+    sigma_rel: float = 0.004      # per-256-dim-group σ / output-range
+    adc_bits: int = 8
+    group: int = 256
+    key: Optional[jax.Array] = None
+
+    def apply(self, y, key):
+        rng = jnp.max(jnp.abs(y), axis=-1, keepdims=True) + 1e-9
+        k = y.shape[-2] if y.ndim >= 2 else 1
+        groups = max(1, int(round(k / self.group)))
+        noise = jax.random.normal(key, y.shape, jnp.float32)
+        y = y + noise * rng * self.sigma_rel * jnp.sqrt(1.0 * groups)
+        q = 2 ** self.adc_bits - 1
+        return jnp.round(y / rng * 0.5 * q) / (0.5 * q) * rng
+
+
+def quantize_weight(w, bits=8):
+    """w: (..., K, N) fp -> {"q": uint8 offset-binary, "scale": (..., N)}
+    (key "q4" for 4-bit so the record stays a pure array pytree — scalars
+    would break lax.scan stacking of layer params).
+
+    Per-output-channel symmetric scaling onto [0, 255] (or [0,15] for w4),
+    zero at 128 (8) — matching the offset-binary storage used by the
+    paper's signed apps (applications.py doc).
+    """
+    assert bits in (4, 8)
+    full = 2 ** bits - 1
+    half = 2 ** (bits - 1)
+    s = jnp.max(jnp.abs(w), axis=-2, keepdims=True) / (half - 1)
+    q = jnp.clip(jnp.round(w / s) + half, 0, full).astype(jnp.uint8)
+    key = "q" if bits == 8 else "q4"
+    return {key: q, "scale": s[..., 0, :].astype(jnp.float32)}
+
+
+def rec_bits(rec) -> int:
+    return 8 if "q" in rec else 4
+
+
+def dequantize_weight(rec):
+    bits = rec_bits(rec)
+    half = 2 ** (bits - 1)
+    q = rec["q"] if bits == 8 else rec["q4"]
+    return (q.astype(jnp.float32) - half) * rec["scale"][..., None, :]
+
+
+def planes(rec):
+    """uint8 -> (msb, lsb) int8 planes (the DIMA column pair)."""
+    q = rec["q"]
+    return ((q >> 4) & 0xF).astype(jnp.int8), (q & 0xF).astype(jnp.int8)
+
+
+def subrange_matmul_jnp(x, rec, noise: Optional[DimaNoiseModel] = None,
+                        expert_axes: Optional[str] = None,
+                        fused_dequant: bool = True):
+    """Reference/jnp path used inside models (GSPMD-shardable einsum form).
+
+    y = (16·(x@msb) + x@lsb − 128·Σx) · scale      [w8: two 4-b planes]
+    y = (x@q4 − 8·Σx) · scale                       [w4: single plane]
+    """
+    bits = rec_bits(rec)
+    half = 2 ** (bits - 1)
+    eq = expert_axes or "...k,kn->...n"
+    xf = x.astype(jnp.float32)
+    sum_x = jnp.sum(xf, axis=-1)
+
+    # offset-binary correction −half·Σx, broadcast to the output layout
+    if expert_axes is None:
+        corr = sum_x[..., None]
+    else:
+        x_sub = eq.split("->")[0].split(",")[0]
+        out_sub = eq.split("->")[1]
+        shape = [x.shape[x_sub.index(c)] if c in x_sub else 1
+                 for c in out_sub]
+        corr = sum_x.reshape(shape)
+
+    if bits == 8:
+        if fused_dequant:
+            # single einsum on the offset-binary plane: the u8->f convert
+            # fuses into the dot (1 B/weight of traffic). The Pallas kernel
+            # realizes the true two-plane MSB/LSB form in VMEM; this is
+            # the XLA-fusable equivalent (EXPERIMENTS.md §Perf A2).
+            yq = jnp.einsum(eq, xf, rec["q"].astype(jnp.float32))
+            y = yq - half * corr
+        else:
+            msb, lsb = planes(rec)
+            ym = jnp.einsum(eq, xf, msb.astype(jnp.float32))
+            yl = jnp.einsum(eq, xf, lsb.astype(jnp.float32))
+            y = 16.0 * ym + yl - half * corr
+    else:
+        yq = jnp.einsum(eq, xf, rec["q4"].astype(jnp.float32))
+        y = yq - half * corr
+    scale = rec["scale"]
+    if expert_axes is not None and scale.ndim == 2:
+        # experts: place scale (E, N) on the output's 'e' and last axes
+        out_sub = expert_axes.split("->")[1]
+        shape = [1] * len(out_sub)
+        shape[out_sub.index("e")] = scale.shape[0]
+        shape[-1] = scale.shape[1]
+        y = y * scale.reshape(shape)
+    else:
+        y = y * scale
+    if noise is not None:
+        key = noise.key if noise.key is not None else jax.random.PRNGKey(0)
+        y = noise.apply(y, key)
+    return y.astype(x.dtype)
+
+
+QUANTIZABLE = frozenset({
+    "wq", "wk", "wv", "wo",                    # attention
+    "w_gate", "w_up", "w_down", "w_side",      # FFN / MoE experts / mLSTM
+    "w_x", "w_gate_branch", "w_out",           # RG-LRU branches
+    "lm_head",
+})
+
+
+def quantize_params(params, bits=8, predicate=None):
+    """Quantize the matmul weights in a param tree (norms, gates, biases,
+    embeddings, routers stay fp).  predicate(path, leaf) for custom policy."""
+    def default_pred(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        return name in QUANTIZABLE
+
+    pred = predicate or default_pred
+
+    def one(path, leaf):
+        if pred(path, leaf):
+            return quantize_weight(leaf.astype(jnp.float32), bits=bits)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(one, params)

@@ -1,0 +1,118 @@
+"""Per-arch smoke tests: every assigned architecture instantiates a
+reduced same-family config and runs forward / train-loss / prefill /
+decode on CPU with shape + finiteness checks — plus decode↔parallel
+consistency (the correctness contract the dry-run relies on)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_arch, reduced
+from repro.models import LM
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=16):
+    if cfg.external_embed:
+        return {"embeds": jax.random.normal(RNG, (B, S, cfg.d_model),
+                                            jnp.float32),
+                "labels": jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)}
+    return {"tokens": jax.random.randint(RNG, (B, S), 0, cfg.vocab_size),
+            "labels": jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_arch_smoke(name):
+    cfg = reduced(get_arch(name))
+    m = LM(cfg)
+    params = m.init(RNG)
+    B, S = 2, 16
+    batch = _batch(cfg, B, S)
+    loss, parts = m.loss(params, batch)
+    assert jnp.isfinite(loss), (name, loss)
+    assert 0 < float(loss) < 20
+
+    logits, _ = m.forward(params, tokens=batch.get("tokens"),
+                          embeds=batch.get("embeds"))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+    cache = m.init_cache(B, S + 4)
+    lg, cache = m.prefill(params, cache, tokens=batch.get("tokens"),
+                          embeds=batch.get("embeds"))
+    assert lg.shape == (B, cfg.vocab_size)
+    nxt = (batch["tokens"][:, :1] if not cfg.external_embed else None)
+    emb = (batch["embeds"][:, :1] if cfg.external_embed else None)
+    lg2, cache = m.decode_step(params, cache, jnp.asarray(S, jnp.int32),
+                               tokens=nxt, embeds=emb)
+    assert lg2.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(lg2).all())
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_decode_matches_parallel(name):
+    """Prefill+decode logits == full parallel forward (fp32; MoE with
+    no-drop capacity so routing is identical across paths)."""
+    cfg = reduced(get_arch(name))
+    over = {"dtype": "float32"}
+    if cfg.n_experts:
+        over["capacity_factor"] = float(cfg.n_experts)
+    cfg = dataclasses.replace(cfg, **over)
+    m = LM(cfg)
+    params = m.init(jax.random.PRNGKey(1))
+    B, S, Pre = 2, 12, 8
+    batch = _batch(cfg, B, S)
+    toks, emb = batch.get("tokens"), batch.get("embeds")
+    full, _ = m.forward(params, tokens=toks, embeds=emb)
+    cache = m.init_cache(B, S)
+    lg, cache = m.prefill(params, cache,
+                          tokens=None if toks is None else toks[:, :Pre],
+                          embeds=None if emb is None else emb[:, :Pre])
+    errs = [float(jnp.abs(lg - full[:, Pre - 1]).max())]
+    for t in range(Pre, S):
+        lg, cache = m.decode_step(
+            params, cache, jnp.asarray(t, jnp.int32),
+            tokens=None if toks is None else toks[:, t:t + 1],
+            embeds=None if emb is None else emb[:, t:t + 1])
+        errs.append(float(jnp.abs(lg - full[:, t]).max()))
+    scale = float(jnp.abs(full).max())
+    assert max(errs) < 5e-3 * max(scale, 1.0), (name, errs)
+
+
+def test_configs_match_assignment():
+    """The full configs carry the assigned hyperparameters exactly."""
+    spec = {
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+        "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+        "internlm2-20b": (48, 6144, 48, 8, 16384, 92544),
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "chameleon-34b": (48, 8192, 64, 8, 22016, 65536),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+    }
+    for name, (L, d, H, KV, ff, V) in spec.items():
+        cfg = get_arch(name)
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+               cfg.d_ff, cfg.vocab_size)
+        assert got == (L, d, H, KV, ff, V), (name, got)
+
+
+def test_param_counts_plausible():
+    """Sanity-check 6·N·D inputs: param counts near the names' billions."""
+    expect = {"yi-34b": (30e9, 40e9), "internlm2-20b": (17e9, 23e9),
+              "chatglm3-6b": (5e9, 8e9), "gemma3-1b": (0.7e9, 1.3e9),
+              "xlstm-1.3b": (1.0e9, 1.8e9), "recurrentgemma-2b": (2e9, 3.5e9),
+              "chameleon-34b": (30e9, 40e9),
+              "phi3.5-moe-42b-a6.6b": (38e9, 46e9)}
+    for name, (lo, hi) in expect.items():
+        n = get_arch(name).param_count()
+        assert lo < n < hi, (name, f"{n:.3e}")
+    # MoE active counts
+    phi = get_arch("phi3.5-moe-42b-a6.6b")
+    assert phi.active_param_count() < 0.25 * phi.param_count()
