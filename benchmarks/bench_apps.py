@@ -11,8 +11,10 @@ from repro.core.params import DimaParams
 P = DimaParams()
 
 
-def fig6_application_table():
-    res = run_all(P)
+def fig6_application_table(backend="reference"):
+    """Per-app accuracy/energy rows; ``backend`` picks the substrate the
+    analog path runs on (any name registered with repro.dima)."""
+    res = run_all(P, backend=backend)
     rows = []
     for name, r in res.items():
         paper_e, paper_mb, paper_thr = en.PAPER_TABLE[name]

@@ -1,4 +1,5 @@
-"""Benchmarks mirroring the paper's figures (Fig. 3/4/5/7)."""
+"""Benchmarks mirroring the paper's figures (Fig. 3/4/5/7), plus the
+unified-API matvec benchmark (looped seed path vs vectorized backend)."""
 from __future__ import annotations
 
 import time
@@ -7,6 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import dima as dima_api
 from repro.core import energy as en
 from repro.core import noise as noise_mod
 from repro.core import pipeline as pl
@@ -31,19 +33,21 @@ def fig3_mrfr_inl():
 
 def fig4_blp_cblp_error():
     """Max |error| as % of output dynamic range on the paper's
-    D=P=const sweep (paper: DP 5.8 %, MD 8.6 %)."""
-    chip_dp = noise_mod.sample_chip(jax.random.PRNGKey(42), P)
-    chip_md = noise_mod.sample_chip(jax.random.PRNGKey(7), P)
+    D=P=const sweep (paper: DP 5.8 %, MD 8.6 %) — through the unified
+    backend API."""
+    be_dp = dima_api.get_backend(
+        "reference", P, noise_mod.sample_chip(jax.random.PRNGKey(42), P))
+    be_md = dima_api.get_backend(
+        "reference", P, noise_mod.sample_chip(jax.random.PRNGKey(7), P))
     dp_errs, md_errs = [], []
     for val in range(0, 256, 4):
         D = np.full((256,), val)
-        out = pl.dima_dot(D, D, P, chip_dp, jax.random.fold_in(KEY, val))
-        dp_errs.append(abs(float(pl.code_to_dot(out.code, P)) - val * val * 256)
+        out = be_dp.dot(D, D, key=jax.random.fold_in(KEY, val))
+        dp_errs.append(abs(float(be_dp.decode(out.code)) - val * val * 256)
                        / (255 * 255 * 256) * 100)
         Q = np.full((256,), 255 - val)
-        out = pl.dima_manhattan(D, Q, P, chip_md,
-                                jax.random.fold_in(KEY, 1000 + val))
-        md_errs.append(abs(float(pl.code_to_md(out.code, P))
+        out = be_md.manhattan(D, Q, key=jax.random.fold_in(KEY, 1000 + val))
+        md_errs.append(abs(float(be_md.decode(out.code, mode="md"))
                            - abs(2 * val - 255) * 256) / (255 * 256) * 100)
     return {"dp_max_err_pct": round(max(dp_errs), 2), "paper_dp_pct": 5.8,
             "md_max_err_pct": round(max(md_errs), 2), "paper_md_pct": 8.6}
@@ -80,6 +84,34 @@ def fig7_chip_summary():
     out["sram"] = "16KB (512x256)"
     out["ctrl_freq"] = "1 GHz"
     return out
+
+
+def bench_matvec_api(m=4096, m_loop=64, n=256, n_iters=3):
+    """µs/call for a (m, n) DP matvec: the seed's per-row Python-loop
+    path (``dima_matvec_loop``, timed on ``m_loop`` rows and extrapolated
+    linearly) vs the vectorized unified-API path (post-jit).  Emitted as
+    BENCH_dima_api.json by benchmarks/run.py."""
+    rng = np.random.default_rng(0)
+    D = jnp.asarray(rng.integers(0, 256, (m, n)))
+    Q = jnp.asarray(rng.integers(0, 256, (n,)))
+    be = dima_api.get_backend("reference", P)
+
+    be.matvec(D, Q, key=KEY).code.block_until_ready()      # jit warm-up
+    t0 = time.perf_counter()
+    for _ in range(n_iters):
+        be.matvec(D, Q, key=KEY).code.block_until_ready()
+    vec_us = (time.perf_counter() - t0) / n_iters * 1e6
+
+    pl.dima_matvec_loop(D[:1], Q, P, None, KEY).code.block_until_ready()
+    t0 = time.perf_counter()
+    pl.dima_matvec_loop(D[:m_loop], Q, P, None, KEY).code.block_until_ready()
+    loop_us_small = (time.perf_counter() - t0) * 1e6
+    loop_us = loop_us_small * m / m_loop                   # linear in rows
+    return {"m": m, "n": n,
+            "vectorized_us_per_call": round(vec_us, 1),
+            "loop_us_per_call": round(loop_us, 1),
+            "loop_timed_rows": m_loop,
+            "speedup_x": round(loop_us / vec_us, 1)}
 
 
 def timed(fn, n=3):

@@ -53,6 +53,13 @@ def main() -> None:
                  f"access_red={conv['access_reduction_x']}x"))
     details["conventional"] = conv
 
+    api = bench_dima.bench_matvec_api()
+    rows.append(("dima_api_matvec", api["vectorized_us_per_call"],
+                 f"loop/vec_speedup={api['speedup_x']}x"))
+    details["dima_api"] = api
+    with open("BENCH_dima_api.json", "w") as f:
+        json.dump(api, f, indent=1)
+
     def _roofline():
         return roofline.table("pod16x16")
     roof, us = _timed(_roofline)

@@ -3,37 +3,44 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Computes a 256-dim dot product and a Manhattan distance through the full
-analog chain (MR-FR -> BLP -> CBLP -> ADC), compares with the exact
-digital reference, and prints the energy/throughput ledger for both
-architectures.
+analog chain (MR-FR -> BLP -> CBLP -> ADC) via the unified backend API
+(``repro.dima``), compares with the exact digital reference, and prints
+the energy/throughput ledger for both architectures.
 """
 import jax
 import numpy as np
 
-from repro.core import (DimaParams, code_to_dot, code_to_md, dima_dot,
-                        dima_manhattan, digital_dot, digital_manhattan,
-                        energy, sample_chip)
+from repro import dima
+from repro.core import energy
 
-p = DimaParams()
+p = dima.DimaParams()
 rng = np.random.default_rng(0)
-chip = sample_chip(jax.random.PRNGKey(7), p)      # one silicon instance
+chip = dima.sample_chip(jax.random.PRNGKey(7), p)  # one silicon instance
 key = jax.random.PRNGKey(11)
 
-D = rng.integers(0, 256, (256,))                  # stored 8-b vector
-P = rng.integers(0, 256, (256,))                  # streamed query
+# one backend per substrate, same signature everywhere
+analog = dima.get_backend("reference", p, chip)    # or "pallas" / "auto"
 
-out = dima_dot(D, P, p, chip, key)
-exact = int(digital_dot(D, P))
+D = rng.integers(0, 256, (256,))                   # stored 8-b vector
+P = rng.integers(0, 256, (256,))                   # streamed query
+
+out = analog.dot(D, P, mode="dp", key=key)
+exact = int(dima.digital_dot(D, P))
 print("== dot product (DP mode) ==")
-print(f"analog  : {float(code_to_dot(out.code, p)):.0f}  "
+print(f"analog  : {float(analog.decode(out.code)):.0f}  "
       f"(ADC code {int(out.code)}, {out.n_cycles} precharges)")
 print(f"digital : {exact}")
-print(f"error   : {abs(float(code_to_dot(out.code, p)) - exact) / (255 * 255 * 256) * 100:.2f}% of range")
+print(f"error   : {abs(float(analog.decode(out.code)) - exact) / (255 * 255 * 256) * 100:.2f}% of range")
 
-out = dima_manhattan(D, P, p, chip, key)
-exact = int(digital_manhattan(D, P))
+out = analog.manhattan(D, P, key=key)
+exact = int(dima.digital_manhattan(D, P))
 print("\n== Manhattan distance (MD mode) ==")
-print(f"analog  : {float(code_to_md(out.code, p)):.0f}   digital: {exact}")
+print(f"analog  : {float(analog.decode(out.code, mode='md')):.0f}   digital: {exact}")
+
+# banked matvec: 512 stored rows against one query, one dispatch
+Dm = rng.integers(0, 256, (512, 256))
+best = int(np.asarray(analog.matvec(Dm, P, mode="md", key=key).code).argmin())
+print(f"\n== banked matvec (512x256 MD) ==  nearest row: {best}")
 
 print("\n== energy / throughput (per decision) ==")
 print(f"{'':14}{'DIMA':>12}{'DIMA 32-bank':>14}{'conventional':>14}")

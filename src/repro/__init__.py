@@ -1,0 +1,7 @@
+"""DIMA reproduction: deep in-memory inference in JAX/Pallas.
+
+Entry points: ``repro.dima`` (unified backend compute API),
+``repro.core`` (analog pipeline + applications + energy models),
+``repro.kernels`` (Pallas), ``repro.models``/``repro.launch``/
+``repro.inference`` (LM stack).
+"""

@@ -4,10 +4,14 @@ MR-FR → BLP → CBLP → ADC (+ energy/timing models + the four applications).
 """
 from repro.core.params import DimaParams  # noqa: F401
 from repro.core.pipeline import (  # noqa: F401
-    DimaOut, dima_dot, dima_manhattan, dima_matvec,
+    DimaOut, dima_dot, dima_manhattan, dima_matvec, dima_matvec_loop,
     digital_dot, digital_manhattan, code_to_dot, code_to_md,
     dp_gain, md_gain,
 )
 from repro.core import energy  # noqa: F401
 from repro.core.noise import sample_chip, ideal_chip  # noqa: F401
+from repro.core.api import (  # noqa: F401
+    DimaBackend, chunked_dot, get_backend, register_backend,
+)
+from repro.core.calibration import Calibration, calibrate  # noqa: F401
 from repro.core.applications import run_all, ALL_APPS, AppResult  # noqa: F401

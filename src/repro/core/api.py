@@ -1,0 +1,447 @@
+"""Unified ``DimaBackend`` compute API — one signature over the digital,
+reference, and Pallas paths (re-exported as ``repro.dima``).
+
+The paper's claims all rest on pushing the *same* operation through the
+analog chain and the exact digital reference.  This module is the ISA
+boundary between the application layer and the substrate: every backend
+exposes ``dot`` / ``manhattan`` / ``matvec`` / ``matmat`` with the single
+signature ``(stored, query, *, mode, key, v_range) -> DimaOut``, plus a
+``decision_cost`` energy/timing model, so applications, serving, and
+benchmarks never care which substrate runs the op.
+
+Backends (``get_backend(name | "auto")``):
+
+- ``digital``   — exact 8-b arithmetic (the conventional architecture);
+                  ``volts`` is the ideal linear transfer so the parity
+                  suite can compare codes against the analog chain.
+- ``reference`` — the jnp behavioral model (core/pipeline.py), fully
+                  vectorized: a 4096×256 matvec is one jit dispatch.
+- ``pallas``    — the TPU kernels (kernels/ops.py); the chip-record →
+                  explicit-noise-array expansion happens inside the
+                  backend, callers never see the kernel signature.
+- ``auto``      — per-call dispatch: Pallas for large banked batches,
+                  reference otherwise.
+
+Ops on >256-dim vectors go through :func:`chunked_dot` — one ADC
+conversion per 256-dim segment, decoded codes summed digitally (exactly
+the prototype's dataflow).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adc as adc_mod
+from repro.core import energy as energy_mod
+from repro.core import pipeline as pl
+from repro.core.params import DimaParams
+from repro.core.pipeline import DimaOut
+
+MODES = ("dp", "md")
+
+
+def _check_mode(mode: str) -> None:
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
+
+
+def _check_op_dims(n: int, p: DimaParams) -> None:
+    """One op = one ADC conversion (two charge-shared access cycles);
+    uniform across backends so a >256-dim misuse fails loudly everywhere
+    instead of silently saturating the ADC range."""
+    if n > p.dims_per_conversion:
+        raise ValueError(
+            f"one op is one ≤{p.dims_per_conversion}-dim conversion "
+            f"(got n={n}); split long vectors with chunked_dot")
+
+
+class DimaBackend:
+    """Base class / protocol for one compute substrate.
+
+    A backend instance owns the circuit parameters ``p`` and one silicon
+    instance ``chip`` (fixed-pattern mismatch record, or None = ideal);
+    per-call state is the data, the dynamic-noise ``key``, and the
+    programmed ADC ``v_range``.  ``DimaOut.n_cycles``/``n_conversions``
+    follow core/pipeline.py conventions: per-op counts for ``dot`` /
+    ``manhattan``, totals for ``matvec`` / ``matmat``.
+    """
+
+    name = "abstract"
+
+    def __init__(self, p: DimaParams = None, chip=None):
+        self.p = p if p is not None else DimaParams()
+        self.chip = chip
+
+    def ideal(self) -> "DimaBackend":
+        """The same substrate with an ideal chip (no fixed-pattern
+        mismatch) — what range calibration runs on."""
+        return type(self)(self.p, None)
+
+    # -- the one signature --------------------------------------------------
+
+    def dot(self, stored, query, *, mode="dp", key=None,
+            v_range=None) -> DimaOut:
+        """One ≤256-dim op per trailing dim; leading dims broadcast."""
+        raise NotImplementedError
+
+    def manhattan(self, stored, query, *, mode="md", key=None,
+                  v_range=None) -> DimaOut:
+        return self.dot(stored, query, mode=mode, key=key, v_range=v_range)
+
+    def matvec(self, stored, query, *, mode="dp", key=None,
+               v_range=None) -> DimaOut:
+        """All stored rows (m, n≤256) against one query (n,)."""
+        raise NotImplementedError
+
+    def matmat(self, stored, queries, *, mode="dp", key=None,
+               v_range=None) -> DimaOut:
+        """stored (m, n) × queries (b, n) -> codes (b, m); per-query keys
+        are ``jax.random.split(key, b)`` on every backend."""
+        queries = jnp.asarray(queries)
+        b = queries.shape[0]
+        keys = (jax.random.split(key, b) if key is not None else [None] * b)
+        outs = [self.matvec(stored, queries[j], mode=mode, key=keys[j],
+                            v_range=v_range) for j in range(b)]
+        return DimaOut(jnp.stack([o.code for o in outs]),
+                       jnp.stack([o.volts for o in outs]),
+                       sum(o.n_cycles for o in outs),
+                       sum(o.n_conversions for o in outs))
+
+    # -- decode / cost ------------------------------------------------------
+
+    def decode(self, code, *, mode="dp", v_range=None):
+        """ADC code -> operation units (dot value or Manhattan distance)."""
+        _check_mode(mode)
+        f = pl.code_to_dot if mode == "dp" else pl.code_to_md
+        return f(code, self.p, v_range)
+
+    def decision_cost(self, n_dims: int, *, mode="dp", n_ops=1,
+                      multi_bank=False, **kw) -> energy_mod.Cost:
+        """Modeled energy/timing of one decision on this substrate."""
+        return energy_mod.dima_decision(self.p, n_dims, mode=mode,
+                                        n_ops=n_ops, multi_bank=multi_bank,
+                                        **kw)
+
+
+# ---------------------------------------------------------------------------
+# registry / factory
+# ---------------------------------------------------------------------------
+
+BACKENDS: dict = {}
+
+
+def register_backend(name: str):
+    """Class decorator: make a backend constructible via get_backend —
+    the plug-in point for future substrates (multi-bank sharded, ...)."""
+    def deco(cls):
+        cls.name = name
+        BACKENDS[name] = cls
+        return cls
+    return deco
+
+
+def get_backend(name: str = "auto", p: DimaParams = None, chip=None,
+                **kwargs) -> DimaBackend:
+    """Factory: ``get_backend("digital" | "reference" | "pallas" | "auto")``.
+
+    Accepts an already-constructed backend and returns it unchanged, so
+    call sites can take ``backend: str | DimaBackend`` parameters.
+    """
+    if isinstance(name, DimaBackend):
+        return name
+    if name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; "
+                         f"registered: {sorted(BACKENDS)}")
+    return BACKENDS[name](p, chip, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# digital: exact 8-b arithmetic (the conventional architecture)
+# ---------------------------------------------------------------------------
+
+@register_backend("digital")
+class DigitalBackend(DimaBackend):
+    """Bit-exact integer compute.  ``volts`` is the *ideal* linear analog
+    transfer of the exact result (the value a zero-systematic-error chain
+    would develop), so codes/volts are directly comparable to the analog
+    backends; ``key`` is accepted and ignored (no noise to sample)."""
+
+    def _gain(self, mode):
+        return pl.dp_gain(self.p) if mode == "dp" else pl.md_gain(self.p)
+
+    def _default_range(self, mode):
+        full = 255.0 * 255.0 if mode == "dp" else 255.0
+        return (0.0, full * self._gain(mode))
+
+    def dot(self, stored, query, *, mode="dp", key=None,
+            v_range=None) -> DimaOut:
+        _check_mode(mode)
+        exact_f = pl.digital_dot if mode == "dp" else pl.digital_manhattan
+        exact = exact_f(stored, query)
+        n = max(jnp.asarray(stored).shape[-1], jnp.asarray(query).shape[-1])
+        _check_op_dims(n, self.p)
+        v = exact.astype(jnp.float32) / self.p.dims_per_conversion \
+            * self._gain(mode)
+        if v_range is None:
+            v_range = self._default_range(mode)
+        code = adc_mod.adc(v, v_range[0], v_range[1], self.p)
+        return DimaOut(code, v, pl._cycles_per_op(n, self.p), 1)
+
+    def matvec(self, stored, query, *, mode="dp", key=None,
+               v_range=None) -> DimaOut:
+        stored = jnp.asarray(stored)
+        m = stored.shape[0]
+        out = self.dot(stored, query, mode=mode, v_range=v_range)
+        return DimaOut(out.code, out.volts, m * out.n_cycles, m)
+
+    def decision_cost(self, n_dims: int, *, mode="dp", n_ops=1,
+                      multi_bank=False, **kw) -> energy_mod.Cost:
+        # the conventional fetch-then-compute architecture (no banks)
+        return energy_mod.conventional_decision(self.p, n_dims, mode=mode,
+                                                n_ops=n_ops)
+
+
+# ---------------------------------------------------------------------------
+# reference: the jnp behavioral model, vectorized
+# ---------------------------------------------------------------------------
+
+@register_backend("reference")
+class ReferenceBackend(DimaBackend):
+    """core/pipeline.py behind the unified signature.  Every entry point
+    is jit-compiled once per (op, mode) — the jit cache keys on argument
+    structure, so chip/key/v_range may each be present or None."""
+
+    def __init__(self, p: DimaParams = None, chip=None):
+        super().__init__(p, chip)
+        self._jit = {}
+
+    def _fn(self, kind, mode):
+        _check_mode(mode)
+        k = (kind, mode)
+        if k not in self._jit:
+            if kind == "op":
+                f = pl.dima_dot if mode == "dp" else pl.dima_manhattan
+                self._jit[k] = jax.jit(
+                    lambda s, q, chip, key, vr: f(s, q, self.p, chip, key,
+                                                  vr)[:2])
+            else:
+                self._jit[k] = jax.jit(
+                    lambda s, q, chip, key, vr: pl.dima_matvec(
+                        s, q, self.p, chip, key, mode, vr)[:2])
+        return self._jit[k]
+
+    def dot(self, stored, query, *, mode="dp", key=None,
+            v_range=None) -> DimaOut:
+        stored = jnp.asarray(stored)
+        query = jnp.asarray(query)
+        n = max(stored.shape[-1], query.shape[-1])
+        _check_op_dims(n, self.p)
+        code, volts = self._fn("op", mode)(stored, query, self.chip, key,
+                                           v_range)
+        return DimaOut(code, volts, pl._cycles_per_op(n, self.p), 1)
+
+    def matvec(self, stored, query, *, mode="dp", key=None,
+               v_range=None) -> DimaOut:
+        stored = jnp.asarray(stored)
+        m = stored.shape[0]
+        _check_op_dims(stored.shape[-1], self.p)
+        code, volts = self._fn("matvec", mode)(stored, jnp.asarray(query),
+                                               self.chip, key, v_range)
+        return DimaOut(code, volts,
+                       m * pl._cycles_per_op(stored.shape[-1], self.p), m)
+
+    def matmat(self, stored, queries, *, mode="dp", key=None,
+               v_range=None) -> DimaOut:
+        stored = jnp.asarray(stored)
+        queries = jnp.asarray(queries)
+        b, m = queries.shape[0], stored.shape[0]
+        _check_op_dims(stored.shape[-1], self.p)
+        n_cycles = b * m * pl._cycles_per_op(stored.shape[-1], self.p)
+        if key is None:
+            code, volts = self._fn("op", mode)(
+                stored[None, :, :], queries[:, None, :], self.chip, None,
+                v_range)
+            return DimaOut(code, volts, n_cycles, b * m)
+        k = ("matmat", mode)
+        if k not in self._jit:
+            self._jit[k] = jax.jit(
+                lambda s, q, chip, key, vr: jax.vmap(
+                    lambda qj, kj: pl.dima_matvec(s, qj, self.p, chip, kj,
+                                                  mode, vr)[:2],
+                    in_axes=(0, 0))(q, jax.random.split(key, q.shape[0])))
+        code, volts = self._jit[k](stored, queries, self.chip, key, v_range)
+        return DimaOut(code, volts, n_cycles, b * m)
+
+
+# ---------------------------------------------------------------------------
+# pallas: the TPU kernels (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+@register_backend("pallas")
+class PallasBackend(DimaBackend):
+    """kernels/ops.py behind the unified signature.  The banked kernels
+    take one query against (M, 256) stored rows; this backend pads the
+    trailing dim to one conversion and expands the chip record / rng key
+    into the kernels' explicit noise operands (ops.py), so the explicit-
+    noise signature never leaks to callers.
+
+    Noise caveat: per-read dynamic noise is drawn with the kernels' own
+    key-splitting layout, so *noisy* results are statistically — not
+    bitwise — equivalent to the reference backend; with ``key=None`` all
+    backends agree exactly (the parity suite asserts it).
+    """
+
+    def __init__(self, p: DimaParams = None, chip=None, interpret=None):
+        super().__init__(p, chip)
+        self.interpret = interpret
+
+    def ideal(self) -> "PallasBackend":
+        return PallasBackend(self.p, None, self.interpret)
+
+    def _banked(self, stored, query, mode, key, v_range):
+        from repro.kernels import ops as kops
+        _check_mode(mode)
+        stored = jnp.asarray(stored)
+        query = jnp.asarray(query)
+        _check_op_dims(stored.shape[-1], self.p)
+        d = pl._pad_to_conversion(stored.astype(jnp.int32), self.p)
+        q = pl._pad_to_conversion(query.astype(jnp.int32), self.p)
+        f = kops.dima_dp_banked if mode == "dp" else kops.dima_md_banked
+        return f(d.astype(jnp.uint8), q.astype(jnp.uint8), self.p,
+                 self.chip, key, v_range, interpret=self.interpret)
+
+    def dot(self, stored, query, *, mode="dp", key=None,
+            v_range=None) -> DimaOut:
+        """Decomposes onto the banked kernels.  Besides (n,)/(m, n) × (n,),
+        the two broadcast layouts the applications/calibration use are
+        routed through matmat: one stored row × a query batch
+        ((1, n) × (B, n) -> (B,)) and a stored bank × a query batch
+        ((1, m, n) × (b, 1, n) -> (b, m))."""
+        stored = jnp.asarray(stored)
+        query = jnp.asarray(query)
+        per_op = pl._cycles_per_op(stored.shape[-1], self.p)
+        if stored.ndim == 1:
+            out = self.matvec(stored[None, :], query, mode=mode, key=key,
+                              v_range=v_range)
+            return DimaOut(out.code[0], out.volts[0], per_op, 1)
+        if stored.ndim == 2 and query.ndim == 1:
+            out = self.matvec(stored, query, mode=mode, key=key,
+                              v_range=v_range)
+            return DimaOut(out.code, out.volts, per_op, 1)
+        if stored.ndim == 2 and stored.shape[0] == 1 and query.ndim == 2:
+            out = self.matmat(stored, query, mode=mode, key=key,
+                              v_range=v_range)
+            return DimaOut(out.code[:, 0], out.volts[:, 0], per_op, 1)
+        if (stored.ndim == 3 and stored.shape[0] == 1 and query.ndim == 3
+                and query.shape[1] == 1):
+            out = self.matmat(stored[0], query[:, 0, :], mode=mode, key=key,
+                              v_range=v_range)
+            return DimaOut(out.code, out.volts, per_op, 1)
+        raise ValueError(
+            f"pallas backend supports stored (n,)/(m, n) × query (n,), "
+            f"(1, n) × (B, n), or (1, m, n) × (b, 1, n); got "
+            f"{stored.shape} × {query.shape} — use the reference backend "
+            "for general broadcasts")
+
+    def matvec(self, stored, query, *, mode="dp", key=None,
+               v_range=None) -> DimaOut:
+        stored = jnp.asarray(stored)
+        if stored.ndim != 2:
+            raise ValueError(f"matvec wants stored (m, n); got "
+                             f"{stored.shape}")
+        m = stored.shape[0]
+        codes, volts = self._banked(stored, query, mode, key, v_range)
+        return DimaOut(codes, volts,
+                       m * pl._cycles_per_op(stored.shape[-1], self.p), m)
+
+
+# ---------------------------------------------------------------------------
+# auto: per-call dispatch
+# ---------------------------------------------------------------------------
+
+@register_backend("auto")
+class AutoBackend(DimaBackend):
+    """Dispatches each call to the cheapest capable substrate: the Pallas
+    kernels for large banked batches (one query against ≥``min_rows``
+    stored rows of ≤256 dims), the reference model otherwise."""
+
+    def __init__(self, p: DimaParams = None, chip=None, min_rows: int = 128):
+        super().__init__(p, chip)
+        self.min_rows = min_rows
+        self.reference = ReferenceBackend(self.p, chip)
+        self.pallas = PallasBackend(self.p, chip)
+
+    def ideal(self) -> "AutoBackend":
+        return AutoBackend(self.p, None, self.min_rows)
+
+    def pick(self, stored, query, mode="dp") -> DimaBackend:
+        stored = jnp.asarray(stored)
+        query = jnp.asarray(query)
+        if (mode in MODES and stored.ndim == 2 and query.ndim == 1
+                and stored.shape[-1] <= self.p.dims_per_conversion
+                and stored.shape[0] >= self.min_rows):
+            return self.pallas
+        return self.reference
+
+    def dot(self, stored, query, *, mode="dp", key=None,
+            v_range=None) -> DimaOut:
+        return self.pick(stored, query, mode).dot(
+            stored, query, mode=mode, key=key, v_range=v_range)
+
+    def matvec(self, stored, query, *, mode="dp", key=None,
+               v_range=None) -> DimaOut:
+        return self.pick(stored, query, mode).matvec(
+            stored, query, mode=mode, key=key, v_range=v_range)
+
+    def matmat(self, stored, queries, *, mode="dp", key=None,
+               v_range=None) -> DimaOut:
+        queries = jnp.asarray(queries)
+        return self.pick(stored, queries[0], mode).matmat(
+            stored, queries, mode=mode, key=key, v_range=v_range)
+
+
+# ---------------------------------------------------------------------------
+# helpers shared by the applications / serving layers
+# ---------------------------------------------------------------------------
+
+def iter_chunks(n: int, per: int):
+    """(start, stop) segments of one conversion each — the single place
+    conversion chunking is defined (shared with core.calibration)."""
+    for a in range(0, n, per):
+        yield a, min(a + per, n)
+
+
+def chunked_dot(backend: DimaBackend, stored, query, *, mode="dp", key=None,
+                v_range=None):
+    """>256-dim op: one ADC conversion per ``dims_per_conversion`` segment,
+    decoded codes summed digitally — the prototype's dataflow for long
+    vectors (e.g. the SVM's 506-dim feature).  Per-chunk keys are
+    ``fold_in(key, chunk_index)``.  Returns the decoded total (float)."""
+    stored = jnp.asarray(stored)
+    query = jnp.asarray(query)
+    n = max(stored.shape[-1], query.shape[-1])
+    total = 0.0
+    for i, (a, b) in enumerate(iter_chunks(n, backend.p.dims_per_conversion)):
+        k = None if key is None else jax.random.fold_in(key, i)
+        out = backend.dot(stored[..., a:b], query[..., a:b], mode=mode,
+                          key=k, v_range=v_range)
+        total = total + backend.decode(out.code, mode=mode, v_range=v_range)
+    return total
+
+
+def weights_energy_per_token(n_active: int, backend: DimaBackend = None,
+                             *, multi_bank: bool = True):
+    """Modeled energy to stream ``n_active`` 8-b weights through the
+    backend once (one decode token): every weight byte is read through
+    MR-FR banks as 256-dim DP conversions.  Returns (pJ, n_banks)."""
+    from repro.core import mapping as mapping_mod
+    if backend is None:
+        backend = get_backend("reference")
+    per = backend.p.dims_per_conversion
+    c = backend.decision_cost(per, mode="dp", n_ops=int(n_active / per),
+                              multi_bank=multi_bank)
+    banks = mapping_mod.banks_for_matrix((n_active,), bits=8, p=backend.p)
+    return c.energy_pj, banks

@@ -4,6 +4,11 @@ Each app runs twice: through the analog chain (MR-FR→BLP→CBLP→ADC) and
 through the exact 8-b digital reference — the paper's claim is ≤1 %
 accuracy degradation between the two at 3.7–9.7× lower energy.
 
+All analog compute goes through one ``repro.dima`` backend (``backend``
+parameter: a name or a ``DimaBackend`` instance), and the per-app ADC
+range + affine trim now live in ``repro.core.calibration`` instead of
+being copy-pasted per application.
+
 Signed arithmetic (SVM weights, MF correlation) uses offset-binary
 storage: w is stored as ŵ = w+128 and the cross terms are removed
 digitally (Σx̂ is accumulated on the stream side while P is written to
@@ -18,9 +23,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import adc as adc_mod
+from repro.core import calibration as cal_mod
 from repro.core import energy as energy_mod
 from repro.core import pipeline as pl
+from repro.core.api import get_backend
 from repro.core.params import DimaParams
 from repro.data import synthetic
 
@@ -35,41 +41,17 @@ class AppResult(NamedTuple):
     n_queries: int
 
 
-def _chunks(n, per):
-    return [(i, min(i + per, n)) for i in range(0, n, per)]
+def _result(name: str, p: DimaParams, n_queries: int, acc_dima: float,
+            acc_digital: float) -> AppResult:
+    """Attach the three cost models to an (acc_dima, acc_digital) pair."""
+    return AppResult(name, acc_dima, acc_digital,
+                     energy_mod.app_cost(p, name),
+                     energy_mod.app_cost(p, name, multi_bank=True),
+                     energy_mod.app_cost(p, name, arch="conv"), n_queries)
 
 
-def _affine_cal(feats_cal, target_cal):
-    """Least-squares affine trim: the standard mixed-signal calibration.
-
-    The BLP multiplier's systematic compression is ≈ linear in the raw
-    (offset-binary) dot and in Σx̂ over the operating range, both of which
-    the controller knows — so a per-app affine map (feats → digital score)
-    fitted once on calibration data removes the systematic part, leaving
-    random noise + ADC quantization (the paper's programmed slicer
-    thresholds play the same role).  Returns the coefficient vector."""
-    A = np.concatenate([feats_cal, np.ones((len(feats_cal), 1))], axis=1)
-    coef, *_ = np.linalg.lstsq(A.astype(np.float64),
-                               target_cal.astype(np.float64), rcond=None)
-    return coef
-
-
-def _affine_apply(coef, feats):
-    A = np.concatenate([feats, np.ones((len(feats), 1))], axis=1)
-    return A.astype(np.float64) @ coef
-
-
-def _analog_dot(D, P, p, chip, key, v_range):
-    """Chunked ≥256-dim dot: one ADC conversion per 256-dim segment,
-    decoded codes summed digitally (exactly the prototype's dataflow)."""
-    n = D.shape[-1]
-    per = p.dims_per_conversion
-    total = 0.0
-    for i, (a, b) in enumerate(_chunks(n, per)):
-        k = None if key is None else jax.random.fold_in(key, i)
-        out = pl.dima_dot(D[..., a:b], P[..., a:b], p, chip, k, v_range)
-        total = total + pl.code_to_dot(out.code, p, v_range)
-    return total
+def _split2(key):
+    return (None, None) if key is None else jax.random.split(key)
 
 
 # ---------------------------------------------------------------------------
@@ -96,7 +78,8 @@ def train_linear_svm(X, y, steps=400, lr=0.5, c=1e-3, seed=0):
 
 
 def run_svm(p: DimaParams = DimaParams(), chip=None, key=None,
-            n_queries=100, seed=0) -> AppResult:
+            n_queries=100, seed=0, backend="reference") -> AppResult:
+    be = get_backend(backend, p, chip)
     X, y = synthetic.faces_dataset(seed=seed)
     Xtr, ytr = X[:-n_queries], y[:-n_queries]
     Xte, yte = X[-n_queries:], y[-n_queries:]
@@ -113,27 +96,14 @@ def run_svm(p: DimaParams = DimaParams(), chip=None, key=None,
 
     acc_dig = float(np.mean((score_digital(Xte) >= 0) == (yte == 1)))
 
-    # analog: ADC range + affine trim calibrated on training data
     Xcal = Xtr[:64]
-    per = p.dims_per_conversion
-    vs = [pl.dima_dot(w_stored[None, a:bb], Xcal[:, a:bb], p).volts
-          for a, bb in _chunks(X.shape[1], per)]
-    v_range = adc_mod.calibrate_range(jnp.concatenate(vs))
-
-    def analog_feats(X, k):
-        dot_hat = np.asarray(_analog_dot(jnp.asarray(w_stored)[None, :],
-                                         jnp.asarray(X), p, chip, k, v_range))
-        return np.stack([dot_hat, X.astype(np.float64).sum(-1)], axis=1)
-
-    kc, kt = ((None, None) if key is None else jax.random.split(key))
-    coef = _affine_cal(analog_feats(Xcal, kc), score_digital(Xcal))
-    score_a = _affine_apply(coef, analog_feats(Xte, kt))
+    kc, kt = _split2(key)
+    cal = cal_mod.calibrate(be, w_stored[None, :], Xcal, mode="dp",
+                            target=score_digital(Xcal), key=kc)
+    score_a = cal_mod.trimmed_scores(cal, be, w_stored[None, :], Xte, key=kt)
     acc_dima = float(np.mean((score_a >= 0) == (yte == 1)))
 
-    return AppResult("svm", acc_dima, acc_dig,
-                     energy_mod.app_cost(p, "svm"),
-                     energy_mod.app_cost(p, "svm", multi_bank=True),
-                     energy_mod.app_cost(p, "svm", arch="conv"), n_queries)
+    return _result("svm", p, n_queries, acc_dima, acc_dig)
 
 
 # ---------------------------------------------------------------------------
@@ -141,7 +111,8 @@ def run_svm(p: DimaParams = DimaParams(), chip=None, key=None,
 # ---------------------------------------------------------------------------
 
 def run_mf(p: DimaParams = DimaParams(), chip=None, key=None,
-           n_queries=100, seed=0) -> AppResult:
+           n_queries=100, seed=0, backend="reference") -> AppResult:
+    be = get_backend(backend, p, chip)
     Xq, yq, tmpl = synthetic.gunshot_queries(n_queries=n_queries + 64,
                                              seed=seed + 2)
     Xcal, ycal = Xq[:64], yq[:64]          # calibration split
@@ -156,23 +127,13 @@ def run_mf(p: DimaParams = DimaParams(), chip=None, key=None,
     thr = 0.5 * (cd_cal[ycal == 1].mean() + cd_cal[ycal == 0].mean())
     acc_dig = float(np.mean((corr_digital(Xte) >= thr) == (yte == 1)))
 
-    out_cal = pl.dima_dot(tmpl[None, :], Xcal, p)
-    v_range = adc_mod.calibrate_range(out_cal.volts)
-
-    def analog_feats(X, k):
-        dot_hat = np.asarray(_analog_dot(jnp.asarray(tmpl)[None, :],
-                                         jnp.asarray(X), p, chip, k, v_range))
-        return np.stack([dot_hat, X.astype(np.float64).sum(-1)], axis=1)
-
-    kc, kt = ((None, None) if key is None else jax.random.split(key))
-    coef = _affine_cal(analog_feats(Xcal, kc), cd_cal.astype(np.float64))
-    corr_a = _affine_apply(coef, analog_feats(Xte, kt))
+    kc, kt = _split2(key)
+    cal = cal_mod.calibrate(be, tmpl[None, :], Xcal, mode="dp",
+                            target=cd_cal.astype(np.float64), key=kc)
+    corr_a = cal_mod.trimmed_scores(cal, be, tmpl[None, :], Xte, key=kt)
     acc_dima = float(np.mean((corr_a >= thr) == (yte == 1)))
 
-    return AppResult("mf", acc_dima, acc_dig,
-                     energy_mod.app_cost(p, "mf"),
-                     energy_mod.app_cost(p, "mf", multi_bank=True),
-                     energy_mod.app_cost(p, "mf", arch="conv"), n_queries)
+    return _result("mf", p, n_queries, acc_dima, acc_dig)
 
 
 # ---------------------------------------------------------------------------
@@ -180,22 +141,20 @@ def run_mf(p: DimaParams = DimaParams(), chip=None, key=None,
 # ---------------------------------------------------------------------------
 
 def run_tm(p: DimaParams = DimaParams(), chip=None, key=None,
-           n_queries=64, seed=0) -> AppResult:
+           n_queries=64, seed=0, backend="reference") -> AppResult:
+    be = get_backend(backend, p, chip)
     D, Q, yq = synthetic.face_id_dataset(n_queries=n_queries, seed=seed + 3)
 
     md_dig = np.asarray(pl.digital_manhattan(D[None, :, :], Q[:, None, :]))
     acc_dig = float(np.mean(md_dig.argmin(-1) == yq))
 
-    out_cal = pl.dima_manhattan(D[None, :, :], Q[:8, None, :], p)
-    v_range = adc_mod.calibrate_range(out_cal.volts)
-    out = pl.dima_manhattan(jnp.asarray(D)[None, :, :],
-                            jnp.asarray(Q)[:, None, :], p, chip, key, v_range)
+    cal = cal_mod.calibrate(be, D[None, :, :], Q[:8, None, :], mode="md")
+    out = be.manhattan(jnp.asarray(D)[None, :, :],
+                       jnp.asarray(Q)[:, None, :], key=key,
+                       v_range=cal.v_range)
     acc_dima = float(np.mean(np.asarray(out.code).argmin(-1) == yq))
 
-    return AppResult("tm", acc_dima, acc_dig,
-                     energy_mod.app_cost(p, "tm"),
-                     energy_mod.app_cost(p, "tm", multi_bank=True),
-                     energy_mod.app_cost(p, "tm", arch="conv"), n_queries)
+    return _result("tm", p, n_queries, acc_dima, acc_dig)
 
 
 # ---------------------------------------------------------------------------
@@ -203,7 +162,8 @@ def run_tm(p: DimaParams = DimaParams(), chip=None, key=None,
 # ---------------------------------------------------------------------------
 
 def run_knn(p: DimaParams = DimaParams(), chip=None, key=None,
-            n_queries=100, seed=0, k=5) -> AppResult:
+            n_queries=100, seed=0, k=5, backend="reference") -> AppResult:
+    be = get_backend(backend, p, chip)
     D, yd, Q, yq = synthetic.digits_dataset(n_queries=n_queries, seed=seed + 4)
 
     def vote(dist):
@@ -215,25 +175,24 @@ def run_knn(p: DimaParams = DimaParams(), chip=None, key=None,
     md_dig = np.asarray(pl.digital_manhattan(D[None, :, :], Q[:, None, :]))
     acc_dig = float(np.mean(vote(md_dig) == yq))
 
-    out_cal = pl.dima_manhattan(D[None, :, :], Q[:8, None, :], p)
-    v_range = adc_mod.calibrate_range(out_cal.volts)
-    out = pl.dima_manhattan(jnp.asarray(D)[None, :, :],
-                            jnp.asarray(Q)[:, None, :], p, chip, key, v_range)
+    cal = cal_mod.calibrate(be, D[None, :, :], Q[:8, None, :], mode="md")
+    out = be.manhattan(jnp.asarray(D)[None, :, :],
+                       jnp.asarray(Q)[:, None, :], key=key,
+                       v_range=cal.v_range)
     acc_dima = float(np.mean(vote(np.asarray(out.code)) == yq))
 
-    return AppResult("knn", acc_dima, acc_dig,
-                     energy_mod.app_cost(p, "knn"),
-                     energy_mod.app_cost(p, "knn", multi_bank=True),
-                     energy_mod.app_cost(p, "knn", arch="conv"), n_queries)
+    return _result("knn", p, n_queries, acc_dima, acc_dig)
 
 
 ALL_APPS = {"svm": run_svm, "mf": run_mf, "tm": run_tm, "knn": run_knn}
 
 
-def run_all(p: DimaParams = DimaParams(), chip_key=7, noise_key=11):
+def run_all(p: DimaParams = DimaParams(), chip_key=7, noise_key=11,
+            backend="reference"):
     from repro.core import noise as noise_mod
     chip = noise_mod.sample_chip(jax.random.PRNGKey(chip_key), p)
     out = {}
     for name, fn in ALL_APPS.items():
-        out[name] = fn(p, chip, jax.random.PRNGKey(noise_key))
+        out[name] = fn(p, chip, jax.random.PRNGKey(noise_key),
+                       backend=backend)
     return out

@@ -1,0 +1,101 @@
+"""Shared mixed-signal calibration for the unified backend API.
+
+Every application ran the same two-step procedure (previously copy-pasted
+four times in core/applications.py):
+
+1. **ADC range**: push calibration data through the *ideal* chain
+   (no mismatch, no noise) and program (v_min, v_max) from the observed
+   swing with headroom — the paper's per-application auto-ranging.
+2. **Affine trim** (signed apps): the BLP multiplier's systematic
+   compression is ≈ linear in the raw offset-binary dot and in Σx̂ over
+   the operating range, both of which the controller knows — so a
+   least-squares affine map from the analog features
+   ``[decoded dot, Σquery]`` onto the digital score, fitted once on
+   calibration data, removes the systematic part (the paper's programmed
+   slicer thresholds play the same role).
+
+``calibrate(backend, stored, cal_queries, ...) -> Calibration`` packages
+both; ``trimmed_scores`` applies the trim at query time.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adc as adc_mod
+from repro.core import api as api_mod
+
+
+class Calibration(NamedTuple):
+    mode: str                              # "dp" | "md"
+    v_range: Tuple[float, float]           # programmed ADC range
+    coef: Optional[np.ndarray] = None      # affine trim (None = range only)
+
+
+def affine_trim(feats_cal, target_cal) -> np.ndarray:
+    """Least-squares affine trim: feats (B, k) -> target (B,) coefficient
+    vector (k+1, incl. intercept) — the standard mixed-signal trim."""
+    A = np.concatenate([feats_cal, np.ones((len(feats_cal), 1))], axis=1)
+    coef, *_ = np.linalg.lstsq(A.astype(np.float64),
+                               np.asarray(target_cal, np.float64), rcond=None)
+    return coef
+
+
+def apply_trim(coef, feats) -> np.ndarray:
+    A = np.concatenate([feats, np.ones((len(feats), 1))], axis=1)
+    return A.astype(np.float64) @ coef
+
+
+def analog_feats(backend: api_mod.DimaBackend, stored, queries, *,
+                 mode="dp", key=None, v_range=None) -> np.ndarray:
+    """The controller-known feature pair per query: the decoded (chunked)
+    analog result and Σquery (needed to remove the offset-binary cross
+    term digitally)."""
+    dot_hat = np.asarray(api_mod.chunked_dot(backend, stored, queries,
+                                             mode=mode, key=key,
+                                             v_range=v_range))
+    q_sum = np.asarray(queries, np.float64).sum(-1)
+    return np.stack([dot_hat, np.broadcast_to(q_sum, dot_hat.shape)], axis=1)
+
+
+def calibrate_range(backend: api_mod.DimaBackend, stored, cal_queries, *,
+                    mode="dp", margin=0.05) -> Tuple[float, float]:
+    """Program (v_min, v_max) from a zero-noise ideal-chip pass over the
+    calibration set, one conversion per 256-dim chunk."""
+    ideal = backend.ideal()
+    stored = jnp.asarray(stored)
+    cal_queries = jnp.asarray(cal_queries)
+    n = max(stored.shape[-1], cal_queries.shape[-1])
+    volts = []
+    for a, b in api_mod.iter_chunks(n, ideal.p.dims_per_conversion):
+        out = ideal.dot(stored[..., a:b], cal_queries[..., a:b], mode=mode)
+        volts.append(out.volts.ravel())
+    return adc_mod.calibrate_range(jnp.concatenate(volts), margin)
+
+
+def calibrate(backend: api_mod.DimaBackend, stored, cal_queries, *,
+              mode="dp", target=None, key=None, margin=0.05) -> Calibration:
+    """Full calibration: ADC range (ideal-chip pass) + optional affine
+    trim fitted on this backend's actual chip/noise (``key``) against the
+    digital ``target`` scores."""
+    v_range = calibrate_range(backend, stored, cal_queries, mode=mode,
+                              margin=margin)
+    coef = None
+    if target is not None:
+        feats = analog_feats(backend, stored, cal_queries, mode=mode,
+                             key=key, v_range=v_range)
+        coef = affine_trim(feats, target)
+    return Calibration(mode, v_range, coef)
+
+
+def trimmed_scores(cal: Calibration, backend: api_mod.DimaBackend, stored,
+                   queries, *, key=None) -> np.ndarray:
+    """Analog scores through the fitted trim (query-time path of the
+    signed applications)."""
+    assert cal.coef is not None, "calibration was fitted without a target"
+    feats = analog_feats(backend, stored, queries, mode=cal.mode, key=key,
+                         v_range=cal.v_range)
+    return apply_trim(cal.coef, feats)

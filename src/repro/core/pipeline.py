@@ -55,31 +55,54 @@ def md_gain(p: DimaParams) -> float:
     return fr.word_gain(p)
 
 
+def _cycle_split(x, n_cycles, w):
+    """(..., n_cycles·w) -> (..., n_cycles, w); slice [..., c, :] equals the
+    seed's per-cycle slice [..., c·w:(c+1)·w]."""
+    return x.reshape(x.shape[:-1] + (n_cycles, w))
+
+
+def _fold_each(key, idx):
+    """fold_in over an index vector -> stacked keys (vmap-invariant, so
+    each row equals the seed loop's ``fold_in(key, i)``)."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
+
+
 def dima_dot(d_words, p_words, p: DimaParams, chip=None, key=None,
              v_range=None) -> DimaOut:
     """Dot product mode. d_words/p_words: (..., n≤256) ints in [0,255].
 
     Returns ADC code ≈ mean_j(D_j·P_j)·G mapped onto (v_min, v_max).
+    The per-cycle work (two pipelined accesses) is a vmap over the cycle
+    axis — one XLA dispatch regardless of batch and cycle count.
     """
     d = _pad_to_conversion(jnp.asarray(d_words, jnp.int32), p)
     q = _pad_to_conversion(jnp.asarray(p_words, jnp.int32), p)
     w = p.words_per_access
     n_cycles = d.shape[-1] // w
+    d_c = _cycle_split(d, n_cycles, w)
+    q_c = _cycle_split(q, n_cycles, w)
 
-    keys = _keys(key, 3)
-    rails_m, rails_l = [], []
-    for c in range(n_cycles):                       # two pipelined accesses
-        dc = d[..., c * w:(c + 1) * w]
-        qc = q[..., c * w:(c + 1) * w]
+    def cycle(dc, qc, k_read, k_blp, k_col_m, k_col_l):
         msb, lsb = fr.split_words(dc)
-        kk = _fold(keys[0], c)
-        v_word = fr.mr_fr(msb, lsb, p, chip, kk)
-        rm, rl = blp_mod.blp_dp(v_word, qc, p, chip, _fold(keys[1], c))
-        rails_m.append(cblp_mod.column_share(rm, p, _fold(keys[2], 2 * c)))
-        rails_l.append(cblp_mod.column_share(rl, p, _fold(keys[2], 2 * c + 1)))
+        v_word = fr.mr_fr(msb, lsb, p, chip, k_read)
+        rm, rl = blp_mod.blp_dp(v_word, qc, p, chip, k_blp)
+        return (cblp_mod.column_share(rm, p, k_col_m),
+                cblp_mod.column_share(rl, p, k_col_l))
 
-    v_m = cblp_mod.cycle_share(jnp.stack(rails_m, -1), p)
-    v_l = cblp_mod.cycle_share(jnp.stack(rails_l, -1), p)
+    if key is None:
+        rails_m, rails_l = jax.vmap(
+            lambda dc, qc: cycle(dc, qc, None, None, None, None),
+            in_axes=(-2, -2), out_axes=-1)(d_c, q_c)
+    else:
+        k0, k1, k2 = _keys(key, 3)
+        c = jnp.arange(n_cycles)
+        rails_m, rails_l = jax.vmap(
+            cycle, in_axes=(-2, -2, 0, 0, 0, 0), out_axes=-1)(
+                d_c, q_c, _fold_each(k0, c), _fold_each(k1, c),
+                _fold_each(k2, 2 * c), _fold_each(k2, 2 * c + 1))
+
+    v_m = cblp_mod.cycle_share(rails_m, p)
+    v_l = cblp_mod.cycle_share(rails_l, p)
     v = cblp_mod.rail_merge(v_m, v_l, p)
 
     if v_range is None:
@@ -97,38 +120,73 @@ def dima_manhattan(d_words, p_words, p: DimaParams, chip=None, key=None,
     w = p.words_per_access
     n_cycles = d.shape[-1] // w
 
-    keys = _keys(key, 4)
     # the comparator reference: both rails at D = P (word value 255 summed)
     v_ref = fr.mr_fr(jnp.full((1,), 15), jnp.full((1,), 15), p, None, None,
                      rep_msb=jnp.zeros((1,), jnp.int32),
                      rep_lsb=jnp.zeros((1,), jnp.int32))[0]
-    outs = []
-    for c in range(n_cycles):
-        dc = d[..., c * w:(c + 1) * w]
-        qc = q[..., c * w:(c + 1) * w]
+    d_c = _cycle_split(d, n_cycles, w)
+    q_c = _cycle_split(q, n_cycles, w)
+
+    def cycle(dc, qc, k_bl, k_blb, k_cmp, k_col):
         msb, lsb = fr.split_words(dc)
         pm, plw = fr.split_words(255 - qc)          # replica stores P̄
-        v_bl = fr.mr_fr(msb, lsb, p, chip, _fold(keys[0], c),
-                        rep_msb=pm, rep_lsb=plw)
+        v_bl = fr.mr_fr(msb, lsb, p, chip, k_bl, rep_msb=pm, rep_lsb=plw)
         dm, dl = fr.split_words(255 - dc)           # BLB: complementary cell
         qm, ql = fr.split_words(qc)
-        v_blb = fr.mr_fr(dm, dl, p, chip, _fold(keys[3], c),
-                         rep_msb=qm, rep_lsb=ql)
-        v_abs = blp_mod.blp_md(v_bl, v_blb, v_ref, p, chip, _fold(keys[1], c))
-        outs.append(cblp_mod.column_share(v_abs, p, _fold(keys[2], c)))
+        v_blb = fr.mr_fr(dm, dl, p, chip, k_blb, rep_msb=qm, rep_lsb=ql)
+        v_abs = blp_mod.blp_md(v_bl, v_blb, v_ref, p, chip, k_cmp)
+        return cblp_mod.column_share(v_abs, p, k_col)
 
-    v = cblp_mod.cycle_share(jnp.stack(outs, -1), p)
+    if key is None:
+        outs = jax.vmap(lambda dc, qc: cycle(dc, qc, None, None, None, None),
+                        in_axes=(-2, -2), out_axes=-1)(d_c, q_c)
+    else:
+        k0, k1, k2, k3 = _keys(key, 4)
+        c = jnp.arange(n_cycles)
+        outs = jax.vmap(cycle, in_axes=(-2, -2, 0, 0, 0, 0), out_axes=-1)(
+            d_c, q_c, _fold_each(k0, c), _fold_each(k3, c),
+            _fold_each(k1, c), _fold_each(k2, c))
+
+    v = cblp_mod.cycle_share(outs, p)
     if v_range is None:
         v_range = (0.0, 255.0 * md_gain(p))
     code = adc_mod.adc(v, v_range[0], v_range[1], p)
     return DimaOut(code, v, n_cycles, 1)
 
 
+def _cycles_per_op(n, p: DimaParams) -> int:
+    return max(n, p.dims_per_conversion) // p.words_per_access
+
+
 def dima_matvec(d_mat, p_vec, p: DimaParams, chip=None, key=None,
                 mode="dp", v_range=None) -> DimaOut:
     """All stored vectors against one query: d_mat (m, n), p_vec (n,).
     Physically: m×(n/128) access cycles on one bank, or m/32 of that in
-    the 32-bank scenario — accounted by energy.py, simulated as a vmap."""
+    the 32-bank scenario — accounted by energy.py, simulated as a vmap.
+
+    One dispatch for the whole matrix; per-row rng keys are derived
+    exactly as the seed's per-row loop (``jax.random.split(key, m)``), so
+    results are bit-for-bit identical to ``dima_matvec_loop``.
+    """
+    d_mat = jnp.asarray(d_mat)
+    m = d_mat.shape[0]
+    f = dima_dot if mode == "dp" else dima_manhattan
+    n_cycles = m * _cycles_per_op(d_mat.shape[-1], p)
+    if key is None:
+        out = f(d_mat, p_vec, p, chip, None, v_range)
+        return DimaOut(out.code, out.volts, n_cycles, m)
+    keys = jax.random.split(key, m)
+    code, volts = jax.vmap(
+        lambda row, k: f(row, p_vec, p, chip, k, v_range)[:2])(d_mat, keys)
+    return DimaOut(code, volts, n_cycles, m)
+
+
+def dima_matvec_loop(d_mat, p_vec, p: DimaParams, chip=None, key=None,
+                     mode="dp", v_range=None) -> DimaOut:
+    """The seed's per-row Python-loop matvec: one traced dima op per
+    stored row.  Kept as the reference the vectorized ``dima_matvec`` is
+    tested bit-for-bit against, and as the benchmark baseline
+    (benchmarks/run.py emits BENCH_dima_api.json comparing the two)."""
     m = d_mat.shape[0]
     keys = (jax.random.split(key, m) if key is not None else [None] * m)
     f = dima_dot if mode == "dp" else dima_manhattan
@@ -178,9 +236,3 @@ def _keys(key, n):
     if key is None:
         return [None] * n
     return list(jax.random.split(key, n))
-
-
-def _fold(key, i):
-    if key is None:
-        return None
-    return jax.random.fold_in(key, i)

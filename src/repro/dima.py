@@ -1,0 +1,41 @@
+"""``repro.dima`` — the one import for DIMA compute.
+
+    from repro import dima
+
+    be = dima.get_backend("auto")                 # or "digital" / "reference" / "pallas"
+    out = be.matvec(stored, query, mode="dp", key=key, v_range=vr)
+    dist = be.decode(out.code, mode="dp", v_range=vr)
+
+    cal = dima.calibrate(be, stored, cal_queries, mode="dp",
+                         target=digital_scores, key=k_cal)
+    scores = dima.trimmed_scores(cal, be, stored, queries, key=k_test)
+
+Migration from the seed entry points:
+
+    repro.core.pipeline.dima_dot(d, q, p, chip, key, vr)
+        -> get_backend("reference", p, chip).dot(d, q, key=key, v_range=vr)
+    repro.core.pipeline.dima_matvec (Python per-row loop)
+        -> backend.matvec (vectorized, one dispatch)
+    repro.kernels.ops.dima_dp_banked(d, q, p, chip, key, vr)
+        -> get_backend("pallas", p, chip).matvec(d, q, mode="dp", ...)
+    repro.core.pipeline.digital_dot / digital_manhattan
+        -> get_backend("digital", p).dot(d, q, mode="dp"|"md")  (exact in
+           .volts·dims/gain; still exported below for raw integer use)
+    applications' copy-pasted ADC-range + affine-trim blocks
+        -> repro.core.calibration.calibrate / trimmed_scores
+"""
+from repro.core.api import (  # noqa: F401
+    MODES, BACKENDS, AutoBackend, DigitalBackend, DimaBackend,
+    PallasBackend, ReferenceBackend, chunked_dot, get_backend,
+    register_backend, weights_energy_per_token,
+)
+from repro.core.calibration import (  # noqa: F401
+    Calibration, affine_trim, analog_feats, apply_trim, calibrate,
+    calibrate_range, trimmed_scores,
+)
+from repro.core.params import DimaParams  # noqa: F401
+from repro.core.pipeline import (  # noqa: F401
+    DimaOut, code_to_dot, code_to_md, digital_dot, digital_manhattan,
+    dima_matvec_loop, dp_gain, md_gain,
+)
+from repro.core.noise import ideal_chip, sample_chip  # noqa: F401

@@ -9,8 +9,11 @@ lockstep sharing one scalar position.  This matches the dry-run's
 the docstring of `step_decode` as future work; the rest of the engine
 (queue, slots, accounting) is already shaped for it.
 
-Energy accounting: every generated token is priced by the DIMA multi-bank
-model when quantized weights are in use (launch/serve.py).
+Energy accounting: every generated token is priced through the unified
+``repro.dima`` backend API (``weights_energy_per_token``) when a DIMA
+noise model is attached — the ``backend`` parameter picks the substrate
+whose cost model applies (multi-bank DIMA by default, the conventional
+architecture for ``"digital"``).
 """
 from __future__ import annotations
 
@@ -21,6 +24,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import dima as dima_api
 
 
 @dataclass
@@ -35,15 +40,22 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model, params, *, bucket: int = 32, max_batch: int = 8,
-                 max_len: int = 512, dima=None):
+                 max_len: int = 512, dima=None, backend="reference"):
         self.model = model
         self.params = params
         self.bucket = bucket
         self.max_batch = max_batch
         self.max_len = max_len
         self.dima = dima
+        self.backend = dima_api.get_backend(backend)
         self.queue: list[Request] = []
-        self.stats = {"requests": 0, "tokens": 0, "batches": 0}
+        self.stats = {"requests": 0, "tokens": 0, "batches": 0,
+                      "energy_pj": 0.0}
+        self._pj_per_token = 0.0
+        self.n_banks = 0
+        if dima is not None:             # DIMA-quantized weights in use
+            self._pj_per_token, self.n_banks = dima_api.weights_energy_per_token(
+                model.cfg.active_param_count(), self.backend)
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode_step(p, c, pos, tokens=t,
                                                    dima=dima))
@@ -99,7 +111,9 @@ class ServeEngine:
                     r.out.append(int(nxt[i]))
         for r in reqs:
             r.done = True
-        self.stats["tokens"] += sum(len(r.out) for r in reqs)
+        n_new = sum(len(r.out) for r in reqs)
+        self.stats["tokens"] += n_new
+        self.stats["energy_pj"] += n_new * self._pj_per_token
         self.stats["batches"] += 1
         return reqs
 

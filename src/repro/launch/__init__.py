@@ -1,0 +1,1 @@
+"""Launch drivers: training, serving, dry-run compiles, mesh/spec utils."""

@@ -279,6 +279,8 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
         rec["compile_s"] = round(time.time() - t1, 1)
 
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, list):                  # older jax: list of dicts
+            ca = ca[0] if ca else {}
         rec["cost_analysis"] = {
             k: float(v) for k, v in ca.items()
             if isinstance(v, (int, float)) and k in

@@ -19,25 +19,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import dima as dima_api
 from repro.configs import RunConfig, get_arch, reduced
-from repro.core import mapping as mapping_mod
 from repro.core.params import DimaParams
 from repro.distributed.sharding import ShardCtx
 from repro.models import LM
 from repro.quant import DimaNoiseModel, quantize_params
 
 
-def dima_energy_per_token(cfg, p: DimaParams = DimaParams()):
+def dima_energy_per_token(cfg, p: DimaParams = DimaParams(), backend=None):
     """Modeled DIMA decode energy: every active weight byte is read once
-    per token through MR-FR banks (multi-bank amortized CTRL)."""
-    n_active = cfg.active_param_count()
-    dims = n_active                       # one 8-b word per weight
-    from repro.core import energy as en
-    ops = dims / 256                      # 256-dim DP per conversion
-    c = en.dima_decision(p, n_dims=256, mode="dp", n_ops=int(ops),
-                         multi_bank=True)
-    banks = mapping_mod.banks_for_matrix((n_active,), bits=8, p=p)
-    return c.energy_pj, banks
+    per token through MR-FR banks (multi-bank amortized CTRL).  Routed
+    through the unified backend API so the substrate is swappable."""
+    be = dima_api.get_backend(backend or "reference", p)
+    return dima_api.weights_energy_per_token(cfg.active_param_count(), be)
 
 
 def generate(model, params, tokens, gen_len, dima=None):
@@ -79,6 +74,9 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--quant", default="none", choices=["none", "dima", "dima4"])
     ap.add_argument("--dima-noise", action="store_true")
+    ap.add_argument("--backend", default="reference",
+                    choices=sorted(dima_api.BACKENDS),
+                    help="DIMA substrate used for the energy model")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -94,9 +92,15 @@ def main(argv=None):
         params = quantize_params(params, bits=4 if args.quant == "dima4" else 8)
         if args.dima_noise:
             dima = DimaNoiseModel(key=jax.random.PRNGKey(args.seed + 1))
-        pj, banks = dima_energy_per_token(cfg, DimaParams())
-        print(f"[serve] DIMA weights: {banks:,} SRAM banks, "
-              f"modeled {pj/1e6:.2f} µJ/token (multi-bank)")
+        pj, banks = dima_energy_per_token(cfg, DimaParams(), args.backend)
+        if args.backend == "digital":   # bank-less conventional architecture
+            where = f"{cfg.active_param_count():,} weight bytes/token"
+            amort = "conventional fetch-then-compute"
+        else:
+            where = f"{banks:,} SRAM banks"
+            amort = "multi-bank"
+        print(f"[serve] DIMA weights: {where}, modeled {pj/1e6:.2f} µJ/token "
+              f"({args.backend} backend, {amort})")
 
     toks = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
                               cfg.vocab_size)

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.distributed.compression import init_error_state, quantize_leaf
 from repro.distributed.fault_tolerance import StepWatchdog

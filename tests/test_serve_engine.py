@@ -63,6 +63,27 @@ def test_engine_matches_single_request():
     assert r.out == ref, (r.out, ref)
 
 
+def test_engine_dima_energy_accounting():
+    """With a DIMA noise model attached, every generated token is priced
+    through the unified backend API (multi-bank MR-FR reads)."""
+    from repro import dima as dima_api
+    from repro.quant import DimaNoiseModel
+    cfg, model, params = _setup(quant=True)
+    eng = ServeEngine(model, params, bucket=8, max_batch=2,
+                      dima=DimaNoiseModel(key=jax.random.PRNGKey(3)),
+                      backend="reference")
+    rng = np.random.default_rng(3)
+    eng.submit(Request(rid=0,
+                       prompt=rng.integers(0, cfg.vocab_size, 6
+                                           ).astype(np.int32),
+                       max_new=3))
+    eng.run()
+    pj, banks = dima_api.weights_energy_per_token(
+        cfg.active_param_count(), dima_api.get_backend("reference"))
+    assert eng.n_banks == banks
+    assert abs(eng.stats["energy_pj"] - 3 * pj) < 1e-6 * pj
+
+
 def test_engine_dima_quantized():
     cfg, model, params = _setup(quant=True)
     eng = ServeEngine(model, params, bucket=8, max_batch=2)
