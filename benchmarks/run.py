@@ -2,10 +2,23 @@
 
 Prints ``name,us_per_call,derived`` CSV rows followed by the detailed
 tables. ``PYTHONPATH=src python -m benchmarks.run``
+
+``--smoke`` runs the harness end-to-end at tiny sizes (CI keeps it from
+rotting): the figure benches that are pure model arithmetic, plus the
+matvec/multibank/crossover sweeps on small matrices — written to
+BENCH_dima_api.smoke.json so toy numbers never overwrite the committed
+full-size artifact.
+
+BENCH_dima_api.json carries, besides the loop-vs-vectorized matvec
+numbers, the single-bank vs multibank comparison (``multibank``) and the
+measured reference↔pallas crossover (``auto_crossover_rows``) that
+``repro.dima.get_backend("auto")`` picks up on the next run.
 """
 from __future__ import annotations
 
+import argparse
 import json
+import os
 import time
 
 
@@ -17,7 +30,12 @@ def _timed(fn):
     return out, us
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes, skip the slow app/roofline benches")
+    args = ap.parse_args(argv)
+
     from benchmarks import bench_apps, bench_conventional, bench_dima
     from benchmarks import roofline
 
@@ -28,20 +46,22 @@ def main() -> None:
     rows.append(("fig3_mrfr_inl", us, f"max_inl={fig3['max_inl_lsb']}LSB"))
     details["fig3"] = fig3
 
-    fig4, us = _timed(bench_dima.fig4_blp_cblp_error)
-    rows.append(("fig4_blp_cblp_error", us,
-                 f"dp={fig4['dp_max_err_pct']}%/md={fig4['md_max_err_pct']}%"))
-    details["fig4"] = fig4
+    if not args.smoke:
+        fig4, us = _timed(bench_dima.fig4_blp_cblp_error)
+        rows.append(("fig4_blp_cblp_error", us,
+                     f"dp={fig4['dp_max_err_pct']}%/"
+                     f"md={fig4['md_max_err_pct']}%"))
+        details["fig4"] = fig4
 
-    fig5, us = _timed(bench_dima.fig5_energy_accuracy_tradeoff)
-    rows.append(("fig5_energy_accuracy", us,
-                 f"sweep_points={len(fig5['sweep'])}"))
-    details["fig5"] = fig5
+        fig5, us = _timed(bench_dima.fig5_energy_accuracy_tradeoff)
+        rows.append(("fig5_energy_accuracy", us,
+                     f"sweep_points={len(fig5['sweep'])}"))
+        details["fig5"] = fig5
 
-    fig6, us = _timed(bench_apps.fig6_application_table)
-    worst_gap = max(r["gap_pct"] for r in fig6)
-    rows.append(("fig6_applications", us, f"worst_acc_gap={worst_gap}%"))
-    details["fig6"] = fig6
+        fig6, us = _timed(bench_apps.fig6_application_table)
+        worst_gap = max(r["gap_pct"] for r in fig6)
+        rows.append(("fig6_applications", us, f"worst_acc_gap={worst_gap}%"))
+        details["fig6"] = fig6
 
     fig7, us = _timed(bench_dima.fig7_chip_summary)
     rows.append(("fig7_chip_summary", us,
@@ -53,22 +73,48 @@ def main() -> None:
                  f"access_red={conv['access_reduction_x']}x"))
     details["conventional"] = conv
 
-    api = bench_dima.bench_matvec_api()
+    api = bench_dima.bench_matvec_api(
+        **({"m": 256, "m_loop": 8} if args.smoke else {}))
     rows.append(("dima_api_matvec", api["vectorized_us_per_call"],
                  f"loop/vec_speedup={api['speedup_x']}x"))
+
+    mb = bench_dima.bench_multibank(
+        **({"m": 512, "n_banks": 8} if args.smoke else {}))
+    api["multibank"] = mb
+    rows.append(("dima_multibank", mb["multibank_us_per_call"],
+                 f"banks={mb['n_banks']};"
+                 f"pJ={mb['multibank_pj_per_decision']};"
+                 f"savings={mb['energy_savings_x']}x"))
+
+    cross = bench_dima.bench_auto_crossover(
+        row_counts=(32, 128) if args.smoke else (16, 32, 64, 128, 256, 512))
+    api["auto_crossover"] = cross["sweep"]
+    api["auto_crossover_rows"] = cross["auto_crossover_rows"]
+    api["auto_crossover_platform"] = cross["auto_crossover_platform"]
+    rows.append(("dima_auto_crossover", 0,
+                 f"min_rows={cross['auto_crossover_rows']}"))
+
     details["dima_api"] = api
-    with open("BENCH_dima_api.json", "w") as f:
+    # full runs refresh the committed repo-root artifact (which
+    # AutoBackend reads for its measured crossover); --smoke writes a
+    # side file so CI / local smoke passes never overwrite real
+    # measurements with toy-size numbers
+    root = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+    name = "BENCH_dima_api.smoke.json" if args.smoke else "BENCH_dima_api.json"
+    with open(os.path.join(root, name), "w") as f:
         json.dump(api, f, indent=1)
 
-    def _roofline():
-        return roofline.table("pod16x16")
-    roof, us = _timed(_roofline)
-    if roof:
-        worst = min(roof, key=lambda r: r["roofline_frac"])
-        rows.append(("roofline_baseline", us,
-                     f"cells={len(roof)};worst={worst['arch']}/"
-                     f"{worst['shape']}={worst['roofline_frac']:.3f}"))
-    details["roofline_cells"] = len(roof)
+    roof = []
+    if not args.smoke:
+        def _roofline():
+            return roofline.table("pod16x16")
+        roof, us = _timed(_roofline)
+        if roof:
+            worst = min(roof, key=lambda r: r["roofline_frac"])
+            rows.append(("roofline_baseline", us,
+                         f"cells={len(roof)};worst={worst['arch']}/"
+                         f"{worst['shape']}={worst['roofline_frac']:.3f}"))
+        details["roofline_cells"] = len(roof)
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

@@ -48,7 +48,9 @@ agree_qn = float(np.mean(np.asarray(out_fp) == np.asarray(out_qn)))
 print(f"token agreement: w8={agree_q * 100:.0f}%  w8+analog-noise={agree_qn * 100:.0f}%")
 
 full = get_arch(args.arch)
-pj, banks = dima_energy_per_token(full)
+pj, banks = dima_energy_per_token(full, backend="multibank")
+pj_1, _ = dima_energy_per_token(full, backend="reference")
 print(f"\nfull {full.name}: {full.active_param_count():,} active params")
 print(f"  -> {banks:,} DIMA banks (16KB each), modeled "
-      f"{pj / 1e6:.1f} µJ/token decode (multi-bank MR-FR reads)")
+      f"{pj / 1e6:.1f} µJ/token decode (multi-bank amortized CTRL; "
+      f"single-bank {pj_1 / 1e6:.1f} µJ)")

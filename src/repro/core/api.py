@@ -19,8 +19,17 @@ Backends (``get_backend(name | "auto")``):
 - ``pallas``    — the TPU kernels (kernels/ops.py); the chip-record →
                   explicit-noise-array expansion happens inside the
                   backend, callers never see the kernel signature.
+- ``multibank`` — the paper's multi-bank scenario *executed*: stored rows
+                  sharded over ``n_banks`` banks, one matvec/matmat fanned
+                  out to an inner per-bank backend (reference or pallas),
+                  per-bank ADC codes merged digitally; costs amortize the
+                  fixed CTRL energy (``decision_cost(multi_bank=True)``).
+                  With a device mesh it fans out via ``shard_map`` over a
+                  ``banks`` axis (distributed/sharding.py).
 - ``auto``      — per-call dispatch: Pallas for large banked batches,
-                  reference otherwise.
+                  reference otherwise; the row-count threshold comes from
+                  the measured crossover in BENCH_dima_api.json when a
+                  benchmark run has produced one.
 
 Ops on >256-dim vectors go through :func:`chunked_dot` — one ADC
 conversion per 256-dim segment, decoded codes summed digitally (exactly
@@ -28,6 +37,9 @@ the prototype's dataflow).
 """
 from __future__ import annotations
 
+import difflib
+import json
+import os
 from typing import Optional, Tuple
 
 import jax
@@ -70,6 +82,9 @@ class DimaBackend:
     """
 
     name = "abstract"
+    # True only for substrates that actually execute bank-sharded — drives
+    # the serving layer's per-token energy switching (amortized CTRL cost)
+    executes_multibank = False
 
     def __init__(self, p: DimaParams = None, chip=None):
         self.p = p if p is not None else DimaParams()
@@ -145,16 +160,21 @@ def register_backend(name: str):
 
 def get_backend(name: str = "auto", p: DimaParams = None, chip=None,
                 **kwargs) -> DimaBackend:
-    """Factory: ``get_backend("digital" | "reference" | "pallas" | "auto")``.
+    """Factory: ``get_backend("digital" | "reference" | "pallas" |
+    "multibank" | "auto")``.
 
     Accepts an already-constructed backend and returns it unchanged, so
     call sites can take ``backend: str | DimaBackend`` parameters.
+    Raises ``KeyError`` listing the registered names (and the closest
+    match) on a typo.
     """
     if isinstance(name, DimaBackend):
         return name
     if name not in BACKENDS:
-        raise ValueError(f"unknown backend {name!r}; "
-                         f"registered: {sorted(BACKENDS)}")
+        close = difflib.get_close_matches(str(name), BACKENDS, n=1)
+        hint = f" — did you mean {close[0]!r}?" if close else ""
+        raise KeyError(f"unknown backend {name!r}; registered backends: "
+                       f"{sorted(BACKENDS)}{hint}")
     return BACKENDS[name](p, chip, **kwargs)
 
 
@@ -294,6 +314,11 @@ class PallasBackend(DimaBackend):
     backends agree exactly (the parity suite asserts it).
     """
 
+    # modes the banked kernels implement: anything else must fail loudly
+    # (never silently fall back to another substrate — AutoBackend is the
+    # only place that is allowed to reroute)
+    KERNEL_MODES = ("dp", "md")
+
     def __init__(self, p: DimaParams = None, chip=None, interpret=None):
         super().__init__(p, chip)
         self.interpret = interpret
@@ -301,9 +326,18 @@ class PallasBackend(DimaBackend):
     def ideal(self) -> "PallasBackend":
         return PallasBackend(self.p, None, self.interpret)
 
+    def _require_kernel_mode(self, mode):
+        _check_mode(mode)
+        if mode not in self.KERNEL_MODES:
+            raise ValueError(
+                f"the pallas banked kernels implement modes "
+                f"{self.KERNEL_MODES}, not {mode!r} — use "
+                f"get_backend('reference') (or 'auto', which routes "
+                f"unsupported modes there) for this op")
+
     def _banked(self, stored, query, mode, key, v_range):
         from repro.kernels import ops as kops
-        _check_mode(mode)
+        self._require_kernel_mode(mode)
         stored = jnp.asarray(stored)
         query = jnp.asarray(query)
         _check_op_dims(stored.shape[-1], self.p)
@@ -320,6 +354,7 @@ class PallasBackend(DimaBackend):
         routed through matmat: one stored row × a query batch
         ((1, n) × (B, n) -> (B,)) and a stored bank × a query batch
         ((1, m, n) × (b, 1, n) -> (b, m))."""
+        self._require_kernel_mode(mode)
         stored = jnp.asarray(stored)
         query = jnp.asarray(query)
         per_op = pl._cycles_per_op(stored.shape[-1], self.p)
@@ -357,19 +392,266 @@ class PallasBackend(DimaBackend):
         return DimaOut(codes, volts,
                        m * pl._cycles_per_op(stored.shape[-1], self.p), m)
 
+    def matmat(self, stored, queries, *, mode="dp", key=None,
+               v_range=None) -> DimaOut:
+        """ONE kernel launch for the whole (b, m) code matrix: the query
+        batch rides the first grid axis (kernels/ops.py matmat wrappers)
+        instead of the base class's per-query Python loop.  Per-query keys
+        are ``jax.random.split(key, b)`` like every other backend (the
+        per-read layout within a query follows the kernels' convention,
+        so noisy codes are statistically — not bitwise — equivalent to
+        reference; with ``key=None`` all backends agree exactly)."""
+        from repro.kernels import ops as kops
+        self._require_kernel_mode(mode)
+        stored = jnp.asarray(stored)
+        queries = jnp.asarray(queries)
+        if stored.ndim != 2 or queries.ndim != 2:
+            raise ValueError(f"matmat wants stored (m, n) × queries "
+                             f"(b, n); got {stored.shape} × {queries.shape}")
+        _check_op_dims(stored.shape[-1], self.p)
+        b, m = queries.shape[0], stored.shape[0]
+        d = pl._pad_to_conversion(stored.astype(jnp.int32), self.p)
+        q = pl._pad_to_conversion(queries.astype(jnp.int32), self.p)
+        f = kops.dima_dp_matmat if mode == "dp" else kops.dima_md_matmat
+        codes, volts = f(d.astype(jnp.uint8), q.astype(jnp.uint8), self.p,
+                         self.chip, key, v_range, interpret=self.interpret)
+        return DimaOut(codes, volts,
+                       b * m * pl._cycles_per_op(stored.shape[-1], self.p),
+                       b * m)
+
+
+# ---------------------------------------------------------------------------
+# multibank: the paper's multi-bank scenario, executed
+# ---------------------------------------------------------------------------
+
+@register_backend("multibank")
+class MultiBankBackend(DimaBackend):
+    """Bank-sharded execution: ``stored`` rows are split into ``n_banks``
+    banks (contiguous row blocks, last bank ragged when the row count
+    does not divide), one ``matvec``/``matmat`` fans out to an *inner*
+    per-bank backend, and the per-bank ADC codes are merged digitally —
+    a concatenation, because each row's decision is exact-per-bank; the
+    merge cost sits in the CTRL budget that ``decision_cost`` amortizes
+    over the banks (``energy.bank_fixed_split``).
+
+    Keys: bank ``b`` draws an independent stream via
+    ``jax.random.fold_in(key, b)``; within a bank the inner backend's own
+    per-row/per-query layout applies.  So a multibank matvec is bit-for-
+    bit the digital merge of per-bank inner runs with those keys — the
+    parity the test suite asserts.
+
+    Mesh fan-out: pass ``mesh`` (a ``jax.sharding.Mesh`` with a ``banks``
+    axis, see ``distributed.sharding.bank_mesh``, or a ``ShardCtx``) and
+    matvec/matmat run as one ``shard_map`` over the bank axis — each
+    device computes its banks' reference pipeline locally and the merge
+    is the sharded-to-replicated gather.  The mesh path requires the row
+    count to divide ``n_banks`` (no ragged last bank across devices) and
+    always runs the reference pipeline per shard (Pallas-in-shard_map is
+    a TPU-only upgrade).
+    """
+
+    executes_multibank = True
+
+    def __init__(self, p: DimaParams = None, chip=None, inner="reference",
+                 n_banks: int = None, mesh=None):
+        super().__init__(p, chip)
+        self.n_banks = (self.p.n_banks_multibank if n_banks is None
+                        else int(n_banks))
+        if self.n_banks < 1:
+            raise ValueError(f"n_banks must be >= 1; got {self.n_banks}")
+        self.inner = (inner if isinstance(inner, DimaBackend)
+                      else get_backend(inner, self.p, chip))
+        if self.inner.executes_multibank:
+            raise ValueError("inner backend must be a single-bank substrate")
+        self.mesh = getattr(mesh, "mesh", mesh)   # ShardCtx | Mesh | None
+        if self.mesh is not None and not isinstance(self.inner,
+                                                    ReferenceBackend):
+            # fail loudly instead of silently diverging from the host path
+            raise ValueError(
+                f"mesh fan-out runs the reference pipeline per shard; "
+                f"inner={self.inner.name!r} is only available on the host "
+                "path (mesh=None) — Pallas-in-shard_map is a TPU-only "
+                "upgrade (ROADMAP)")
+
+    def ideal(self) -> "MultiBankBackend":
+        return MultiBankBackend(self.p, None, inner=self.inner.ideal(),
+                                n_banks=self.n_banks, mesh=self.mesh)
+
+    def bank_slices(self, m: int):
+        """Contiguous (start, stop) row blocks, one per occupied bank;
+        the last bank is ragged when n_banks does not divide m, and
+        trailing banks are empty (skipped) when m < n_banks."""
+        rows_per = -(-m // self.n_banks)             # ceil
+        return [(a, min(a + rows_per, m)) for a in range(0, m, rows_per)]
+
+    def _bank_key(self, key, b):
+        return None if key is None else jax.random.fold_in(key, b)
+
+    @staticmethod
+    def _merge(outs, axis=0) -> DimaOut:
+        """The digital merge: per-bank code/volt blocks concatenated in
+        row order (each decision is already exact-per-bank), cycle and
+        conversion counts summed — total work is bank-count invariant."""
+        return DimaOut(jnp.concatenate([o.code for o in outs], axis),
+                       jnp.concatenate([o.volts for o in outs], axis),
+                       sum(o.n_cycles for o in outs),
+                       sum(o.n_conversions for o in outs))
+
+    def dot(self, stored, query, *, mode="dp", key=None,
+            v_range=None) -> DimaOut:
+        """A single op occupies a single bank: straight delegation (the
+        cost model still amortizes, which is exactly the paper's † rows —
+        31 other banks work on other decisions concurrently)."""
+        return self.inner.dot(stored, query, mode=mode, key=key,
+                              v_range=v_range)
+
+    def matvec(self, stored, query, *, mode="dp", key=None,
+               v_range=None) -> DimaOut:
+        stored = jnp.asarray(stored)
+        if stored.ndim != 2:
+            raise ValueError(f"matvec wants stored (m, n); got "
+                             f"{stored.shape}")
+        _check_op_dims(stored.shape[-1], self.p)
+        if self.mesh is not None:
+            return self._matvec_mesh(stored, jnp.asarray(query), mode, key,
+                                     v_range)
+        outs = [self.inner.matvec(stored[a:z], query, mode=mode,
+                                  key=self._bank_key(key, b),
+                                  v_range=v_range)
+                for b, (a, z) in enumerate(self.bank_slices(stored.shape[0]))]
+        return self._merge(outs, axis=0)
+
+    def matmat(self, stored, queries, *, mode="dp", key=None,
+               v_range=None) -> DimaOut:
+        stored = jnp.asarray(stored)
+        queries = jnp.asarray(queries)
+        if stored.ndim != 2 or queries.ndim != 2:
+            raise ValueError(f"matmat wants stored (m, n) × queries "
+                             f"(b, n); got {stored.shape} × {queries.shape}")
+        _check_op_dims(stored.shape[-1], self.p)
+        outs = [self.inner.matmat(stored[a:z], queries, mode=mode,
+                                  key=self._bank_key(key, b),
+                                  v_range=v_range)
+                for b, (a, z) in enumerate(self.bank_slices(stored.shape[0]))]
+        return self._merge(outs, axis=1)
+
+    # -- device-mesh fan-out ------------------------------------------------
+
+    def _matvec_mesh(self, stored, query, mode, key, v_range) -> DimaOut:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec
+        _check_mode(mode)
+        mesh = self.mesh
+        if "banks" not in mesh.axis_names:
+            raise ValueError(
+                f"multibank mesh needs a 'banks' axis; got "
+                f"{mesh.axis_names} — build one with "
+                "repro.distributed.sharding.bank_mesh()")
+        nb = self.n_banks
+        m, n = stored.shape
+        if m % nb != 0:
+            raise ValueError(
+                f"mesh fan-out shards rows uniformly: m={m} must divide "
+                f"into n_banks={nb} — pad stored rows or use the host "
+                "path (mesh=None), which handles the ragged last bank")
+        if nb % mesh.shape["banks"] != 0:
+            raise ValueError(
+                f"n_banks={nb} must be a multiple of the mesh 'banks' "
+                f"axis size {mesh.shape['banks']}")
+        rows_per = m // nb
+        banked = stored.reshape(nb, rows_per, n)
+        p, chip = self.p, self.chip
+
+        def per_shard(d_blk, q):
+            # d_blk: this device's (nb_local, rows_per, n) slice; bank ids
+            # resume where the previous shard stopped, so fold_in streams
+            # match the host path bank-for-bank.
+            start = jax.lax.axis_index("banks") * d_blk.shape[0]
+
+            def one_bank(i, d_b):
+                k = (None if key is None
+                     else jax.random.fold_in(key, start + i))
+                code, volts = pl.dima_matvec(d_b, q, p, chip, k, mode,
+                                             v_range)[:2]
+                return code, volts
+
+            return jax.vmap(one_bank)(jnp.arange(d_blk.shape[0]), d_blk)
+
+        f = shard_map(per_shard, mesh=mesh,
+                      in_specs=(PartitionSpec("banks"), PartitionSpec()),
+                      out_specs=(PartitionSpec("banks"),
+                                 PartitionSpec("banks")),
+                      check_rep=False)
+        code, volts = f(banked, query)
+        return DimaOut(code.reshape(m), volts.reshape(m),
+                       m * pl._cycles_per_op(n, self.p), m)
+
+    # -- cost ---------------------------------------------------------------
+
+    @property
+    def bank_fixed_pj(self) -> float:
+        """Per-bank share of the fixed CTRL energy (the merge path's
+        per-conversion charge)."""
+        return energy_mod.bank_fixed_split(self.p, self.n_banks)
+
+    def decision_cost(self, n_dims: int, *, mode="dp", n_ops=1,
+                      multi_bank=True, **kw) -> energy_mod.Cost:
+        """Always the amortized model: this substrate *executes* banked,
+        so the fixed CTRL energy splits over its ``n_banks``."""
+        return energy_mod.dima_decision(self.p, n_dims, mode=mode,
+                                        n_ops=n_ops, multi_bank=True,
+                                        n_banks=self.n_banks, **kw)
+
 
 # ---------------------------------------------------------------------------
 # auto: per-call dispatch
 # ---------------------------------------------------------------------------
 
+_MIN_ROWS_DEFAULT = 128
+# the bench artifact lives at the repo root (src/repro/core/ -> three up),
+# NOT in the process CWD — dispatch must not change with the launch
+# directory; absent in an installed package -> static fallback
+_BENCH_JSON = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "BENCH_dima_api.json"))
+
+
+def measured_min_rows(path: str = None) -> Optional[int]:
+    """The reference↔pallas crossover measured by ``benchmarks/run.py``
+    (``auto_crossover_rows`` in the repo-root BENCH_dima_api.json,
+    override the path with $DIMA_BENCH_JSON).  None when no benchmark
+    run has produced one — AutoBackend then falls back to the static
+    default.
+
+    The crossover is platform-specific (interpret-mode Pallas on CPU vs
+    native lowering on TPU), so a measurement tagged with a different
+    ``auto_crossover_platform`` than the running backend is ignored;
+    untagged artifacts are trusted as-is."""
+    path = path or os.environ.get("DIMA_BENCH_JSON", _BENCH_JSON)
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        plat = data.get("auto_crossover_platform")
+        if plat is not None and plat != jax.default_backend():
+            return None
+        v = data.get("auto_crossover_rows")
+        return int(v) if v else None
+    except (OSError, ValueError, TypeError):
+        return None
+
+
 @register_backend("auto")
 class AutoBackend(DimaBackend):
     """Dispatches each call to the cheapest capable substrate: the Pallas
     kernels for large banked batches (one query against ≥``min_rows``
-    stored rows of ≤256 dims), the reference model otherwise."""
+    stored rows of ≤256 dims), the reference model otherwise.
+    ``min_rows`` defaults to the measured crossover from the last
+    benchmark run (``measured_min_rows``) when BENCH_dima_api.json is
+    present, else 128."""
 
-    def __init__(self, p: DimaParams = None, chip=None, min_rows: int = 128):
+    def __init__(self, p: DimaParams = None, chip=None, min_rows: int = None):
         super().__init__(p, chip)
+        if min_rows is None:
+            min_rows = measured_min_rows() or _MIN_ROWS_DEFAULT
         self.min_rows = min_rows
         self.reference = ReferenceBackend(self.p, chip)
         self.pallas = PallasBackend(self.p, chip)
@@ -380,7 +662,8 @@ class AutoBackend(DimaBackend):
     def pick(self, stored, query, mode="dp") -> DimaBackend:
         stored = jnp.asarray(stored)
         query = jnp.asarray(query)
-        if (mode in MODES and stored.ndim == 2 and query.ndim == 1
+        if (mode in PallasBackend.KERNEL_MODES and stored.ndim == 2
+                and query.ndim == 1
                 and stored.shape[-1] <= self.p.dims_per_conversion
                 and stored.shape[0] >= self.min_rows):
             return self.pallas
@@ -433,13 +716,21 @@ def chunked_dot(backend: DimaBackend, stored, query, *, mode="dp", key=None,
 
 
 def weights_energy_per_token(n_active: int, backend: DimaBackend = None,
-                             *, multi_bank: bool = True):
+                             *, multi_bank: bool = None):
     """Modeled energy to stream ``n_active`` 8-b weights through the
     backend once (one decode token): every weight byte is read through
-    MR-FR banks as 256-dim DP conversions.  Returns (pJ, n_banks)."""
+    MR-FR banks as 256-dim DP conversions.  Returns (pJ, n_banks).
+
+    ``multi_bank=None`` switches on what the backend *executes*: the
+    amortized CTRL model for ``multibank`` (which forces it regardless),
+    the single-bank model for the other analog substrates, and the
+    conventional fetch-then-compute model for ``digital`` (which ignores
+    the flag).  Pass an explicit bool to model a what-if."""
     from repro.core import mapping as mapping_mod
     if backend is None:
         backend = get_backend("reference")
+    if multi_bank is None:
+        multi_bank = backend.executes_multibank
     per = backend.p.dims_per_conversion
     c = backend.decision_cost(per, mode="dp", n_ops=int(n_active / per),
                               multi_bank=multi_bank)

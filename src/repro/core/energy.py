@@ -57,15 +57,25 @@ def _e_cycle(p: DimaParams, mode: str, delta_v_scale: float = 1.0) -> float:
     return base * (0.55 + 0.45 * delta_v_scale)
 
 
+def bank_fixed_split(p: DimaParams, n_banks: int = None) -> float:
+    """Per-bank share of the fixed per-conversion CTRL/clock energy in the
+    multi-bank scenario (the paper's † rows amortize ``e_fixed_conv_pj``
+    over the banks sharing one controller).  This is the number the
+    multi-bank merge path charges each bank's conversion with — the
+    digital code merge itself is absorbed in the CTRL budget."""
+    return p.e_fixed_conv_pj / (n_banks or p.n_banks_multibank)
+
+
 def dima_decision(p: DimaParams, n_dims: int, mode: str = "dp",
                   n_ops: int = 1, pipelined: bool = None,
                   multi_bank: bool = False, n_sort: int = 0,
-                  delta_v_scale: float = 1.0) -> Cost:
+                  delta_v_scale: float = 1.0, n_banks: int = None) -> Cost:
     """Cost of one decision = ``n_ops`` DP/MD ops of ``n_dims`` each.
 
     pipelined: ADC conversions overlap the next access burst (TM/KNN);
-    defaults to n_ops > 1.  multi_bank: 32-bank amortization of the fixed
-    CTRL energy (the paper's † rows).
+    defaults to n_ops > 1.  multi_bank: bank amortization of the fixed
+    CTRL energy (the paper's † rows); ``n_banks`` overrides the paper's
+    32-bank scenario for backends executing a different bank count.
     """
     if pipelined is None:
         pipelined = n_ops > 1
@@ -75,7 +85,8 @@ def dima_decision(p: DimaParams, n_dims: int, mode: str = "dp",
     n_cyc = n_ops * n_cyc_per_op
     n_conv = n_ops * n_conv_per_op
 
-    fixed = p.e_fixed_conv_pj / (p.n_banks_multibank if multi_bank else 1)
+    fixed = (bank_fixed_split(p, n_banks) if multi_bank
+             else p.e_fixed_conv_pj)
     e = (n_cyc * _e_cycle(p, mode, delta_v_scale)
          + n_conv * (p.e_adc_pj + fixed + p.e_digital_overhead_pj)
          + n_sort * p.e_sort_pj)

@@ -2,9 +2,14 @@
 
     from repro import dima
 
-    be = dima.get_backend("auto")                 # or "digital" / "reference" / "pallas"
+    be = dima.get_backend("auto")   # or "digital"/"reference"/"pallas"/"multibank"
     out = be.matvec(stored, query, mode="dp", key=key, v_range=vr)
     dist = be.decode(out.code, mode="dp", v_range=vr)
+
+    # the paper's 32-bank scenario, executed (fold_in per-bank keys,
+    # digital code merge, amortized decision_cost); add
+    # mesh=repro.distributed.sharding.bank_mesh() for device fan-out
+    mb = dima.get_backend("multibank", n_banks=32)
 
     cal = dima.calibrate(be, stored, cal_queries, mode="dp",
                          target=digital_scores, key=k_cal)
@@ -26,8 +31,9 @@ Migration from the seed entry points:
 """
 from repro.core.api import (  # noqa: F401
     MODES, BACKENDS, AutoBackend, DigitalBackend, DimaBackend,
-    PallasBackend, ReferenceBackend, chunked_dot, get_backend,
-    register_backend, weights_energy_per_token,
+    MultiBankBackend, PallasBackend, ReferenceBackend, chunked_dot,
+    get_backend, measured_min_rows, register_backend,
+    weights_energy_per_token,
 )
 from repro.core.calibration import (  # noqa: F401
     Calibration, affine_trim, analog_feats, apply_trim, calibrate,

@@ -32,8 +32,29 @@ _LOGICAL = {
     "vocab": ("model",),
     "expert": ("model",),
     "model_dim": ("model",),   # used for flattened head/ff dims in weights
+    "banks": ("banks",),       # DIMA multi-bank fan-out (bank-stacked dim0)
     None: (),
 }
+
+
+def bank_mesh(n_banks: int = None, devices=None) -> Mesh:
+    """1-D device mesh over a ``banks`` axis for the multibank DIMA
+    backend's ``shard_map`` fan-out.
+
+    Uses the largest divisor of ``n_banks`` that fits the available
+    devices, so each device owns an integer number of banks (the paper's
+    32-bank scenario on 8 devices → 4 banks per device; on one device the
+    mesh degenerates to a single shard but still exercises the shard_map
+    path).  ``n_banks=None`` defaults to ``DimaParams.n_banks_multibank``.
+    """
+    if n_banks is None:
+        from repro.core.params import DimaParams
+        n_banks = DimaParams().n_banks_multibank
+    devices = list(jax.devices()) if devices is None else list(devices)
+    k = min(len(devices), n_banks)
+    while n_banks % k:
+        k -= 1
+    return Mesh(np.asarray(devices[:k]), ("banks",))
 
 
 @dataclass

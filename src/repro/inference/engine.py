@@ -5,15 +5,20 @@ Batching model: *bucketed static batching* — requests are grouped by
 prompt length (bucket = rounded-up length), each bucket decodes in
 lockstep sharing one scalar position.  This matches the dry-run's
 `serve_step` contract (one position per batch).  Continuous batching
-(per-slot positions) needs a vmapped per-row cache write — sketched in
-the docstring of `step_decode` as future work; the rest of the engine
-(queue, slots, accounting) is already shaped for it.
+(per-slot positions) needs a vmapped per-row cache write — still the
+next open ROADMAP item; the rest of the engine (queue, slots,
+accounting) is already shaped for it.  Backend switching, by contrast,
+is now real: ``backend`` accepts any registered ``repro.dima`` substrate
+name (or instance), including ``"multibank"``, whose bank-sharded
+execution and amortized cost model flow through decode unchanged.
 
 Energy accounting: every generated token is priced through the unified
 ``repro.dima`` backend API (``weights_energy_per_token``) when a DIMA
 noise model is attached — the ``backend`` parameter picks the substrate
-whose cost model applies (multi-bank DIMA by default, the conventional
-architecture for ``"digital"``).
+whose cost model applies: the amortized multi-bank model for
+``"multibank"`` (the only substrate that executes bank-sharded), the
+single-bank DIMA model for ``"reference"``/``"pallas"``, and the
+conventional fetch-then-compute architecture for ``"digital"``.
 """
 from __future__ import annotations
 

@@ -1,6 +1,6 @@
 """Pallas kernel: the DIMA DP-mode analog pipeline (MR-FR → BLP capacitive
-multiply → CBLP charge share → ADC) for a block of stored rows against one
-streamed query.
+multiply → CBLP charge share → ADC) for a block of stored rows against a
+batch of streamed queries.
 
 This is the *simulation* kernel (used by the banked Monte-Carlo accuracy
 studies, where millions of analog ops dominate wall time): the full
@@ -8,8 +8,12 @@ transfer-function + mismatch + noise math runs vectorized on (BM, 256)
 tiles in VMEM.  Noise is an explicit operand — kernels must be
 deterministic — and the jnp oracle is kernels/ref.py::dima_dp_ref.
 
-Grid: (M/BM,).  Lane layout: the 128 columns of one access cycle sit on
-the 128-lane axis; the two sub-range cycles stack on sublanes.
+Grid: (B, M/BM) — the query batch on the first grid axis, stored-row
+blocks on the second, so a matmat is ONE kernel launch and a matvec is
+the B=1 special case (``dima_dp``).  The same grid layout serves each
+shard of the multi-bank backend: a bank is just a smaller M.  Lane
+layout: the 128 columns of one access cycle sit on the 128-lane axis;
+the two sub-range cycles stack on sublanes.
 """
 from __future__ import annotations
 
@@ -38,7 +42,7 @@ def _make_kernel(p: DimaParams):
         vl = p.delta_v_lsb * l * (1.0 - p.inl_beta * l)
         r = 16.0 * (1.0 + ce_ref[...])              # trim-cap ratio error
         v_word = (r * vm + vl) / (r + 1.0)
-        v_word = v_word * cg_ref[...] + rn_ref[...]
+        v_word = v_word * cg_ref[...] + rn_ref[...].reshape(BM, 2, 128)
 
         # BLP: two parallel 4-b capacitive multipliers (P sub-ranged)
         pm = ((q >> 4) & 0xF).astype(jnp.float32)
@@ -51,7 +55,7 @@ def _make_kernel(p: DimaParams):
             + mo[1] * (plo > 0)
 
         # CBLP: column charge-share (mean), cycle merge, 16:1 rail merge
-        cn = cn_ref[...]                             # (BM, 2, 2)
+        cn = cn_ref[...].reshape(BM, 2, 2)
         vmr = jnp.mean(rail_m, axis=2) + cn[:, :, 0]  # (BM, 2)
         vlr = jnp.mean(rail_l, axis=2) + cn[:, :, 1]
         v = (16.0 * jnp.mean(vmr, axis=1) + jnp.mean(vlr, axis=1)) / 17.0
@@ -60,10 +64,52 @@ def _make_kernel(p: DimaParams):
         vr = vr_ref[...]
         full = float(2 ** p.adc_bits - 1)
         x = (v - vr[0, 0]) / jnp.maximum(vr[0, 1] - vr[0, 0], 1e-9)
-        code_ref[...] = jnp.clip(jnp.round(x * full), 0, full).astype(jnp.int32)
-        volt_ref[...] = v
+        code_ref[...] = jnp.clip(jnp.round(x * full), 0,
+                                 full).astype(jnp.int32).reshape(1, BM)
+        volt_ref[...] = v.reshape(1, BM)
 
     return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("params", "interpret"))
+def dima_dp_batch(d, qs, col_gain, cap_eps, mult_gain, mult_off, read_noise,
+                  cblp_noise, v_range, *, params: DimaParams = DimaParams(),
+                  interpret=None):
+    """Query-batched grid: d (M,256) uint8; qs (B,256) uint8; chip arrays
+    (…,128); read_noise (B,M,2,128); cblp_noise (B,M,2,2); v_range (1,2).
+    Returns (codes (B,M) int32, volts (B,M) f32) — one kernel launch."""
+    M = d.shape[0]
+    B = qs.shape[0]
+    assert M % BM == 0, M
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    grid = (B, M // BM)
+    codes, volts = pl.pallas_call(
+        _make_kernel(params),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, 256), lambda b, i: (i, 0)),
+            pl.BlockSpec((1, 256), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, 128), lambda b, i: (0, 0)),
+            pl.BlockSpec((1, 128), lambda b, i: (0, 0)),
+            pl.BlockSpec((2, 128), lambda b, i: (0, 0)),
+            pl.BlockSpec((2, 128), lambda b, i: (0, 0)),
+            pl.BlockSpec((1, BM, 2, 128), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, BM, 2, 2), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, 2), lambda b, i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, BM), lambda b, i: (b, i)),
+            pl.BlockSpec((1, BM), lambda b, i: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, M), jnp.int32),
+            jax.ShapeDtypeStruct((B, M), jnp.float32),
+        ],
+        interpret=interpret,
+    )(d, qs, col_gain.reshape(1, 128), cap_eps.reshape(1, 128),
+      mult_gain, mult_off, read_noise, cblp_noise, v_range)
+    return codes, volts
 
 
 @functools.partial(jax.jit, static_argnames=("params", "interpret"))
@@ -72,36 +118,9 @@ def dima_dp(d, q, col_gain, cap_eps, mult_gain, mult_off, read_noise,
             interpret=None):
     """d (M,256) uint8; q (256,) uint8; chip arrays (…,128); read_noise
     (M,2,128); cblp_noise (M,2,2); v_range (1,2) f32.
-    Returns (codes (M,) int32, volts (M,) f32)."""
-    M = d.shape[0]
-    assert M % BM == 0, M
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
-    grid = (M // BM,)
-    codes, volts = pl.pallas_call(
-        _make_kernel(params),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((BM, 256), lambda i: (i, 0)),
-            pl.BlockSpec((1, 256), lambda i: (0, 0)),
-            pl.BlockSpec((1, 128), lambda i: (0, 0)),
-            pl.BlockSpec((1, 128), lambda i: (0, 0)),
-            pl.BlockSpec((2, 128), lambda i: (0, 0)),
-            pl.BlockSpec((2, 128), lambda i: (0, 0)),
-            pl.BlockSpec((BM, 2, 128), lambda i: (i, 0, 0)),
-            pl.BlockSpec((BM, 2, 2), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, 2), lambda i: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((BM,), lambda i: (i,)),
-            pl.BlockSpec((BM,), lambda i: (i,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((M,), jnp.int32),
-            jax.ShapeDtypeStruct((M,), jnp.float32),
-        ],
-        interpret=interpret,
-    )(d, q.reshape(1, 256), col_gain.reshape(1, 128),
-      cap_eps.reshape(1, 128), mult_gain, mult_off, read_noise,
-      cblp_noise, v_range)
-    return codes, volts
+    Returns (codes (M,) int32, volts (M,) f32).  B=1 of ``dima_dp_batch``."""
+    codes, volts = dima_dp_batch(
+        d, q.reshape(1, 256), col_gain, cap_eps, mult_gain, mult_off,
+        read_noise[None], cblp_noise[None], v_range, params=params,
+        interpret=interpret)
+    return codes[0], volts[0]

@@ -3,6 +3,9 @@
 Dual-rail functional read — BL develops f(D + P̄), BLB the complementary
 f(D̄ + P) — comparator + mux pick the deeper swing, CBLP averages, ADC
 converts.  Oracle: kernels/ref.py::dima_md_ref.
+
+Grid: (B, M/BM) like dima_dp.py — matmat in one launch, matvec = B=1,
+and each multi-bank shard reuses the same layout with a smaller M.
 """
 from __future__ import annotations
 
@@ -40,23 +43,64 @@ def _make_kernel(p: DimaParams):
             vl = _transfer(l, p, beta)
             return ((r * vm + vl) / (r + 1.0)) * cg + noise
 
-        v_bl = read(d, 255 - q, rn_ref[...])         # f(D + P̄)
-        v_blb = read(255 - d, q, rnb_ref[...])       # f(D̄ + P)
+        v_bl = read(d, 255 - q, rn_ref[...].reshape(BM, 2, 128))   # f(D + P̄)
+        v_blb = read(255 - d, q, rnb_ref[...].reshape(BM, 2, 128))  # f(D̄ + P)
         vref = (16.0 * _transfer(jnp.float32(15.0), p, beta)
                 + _transfer(jnp.float32(15.0), p, beta)) / 17.0
-        pick = (v_bl + cmp_ref[...]) >= v_blb
+        pick = (v_bl + cmp_ref[...].reshape(BM, 2, 128)) >= v_blb
         v_abs = jnp.maximum(jnp.where(pick, v_bl, v_blb) - vref, 0.0)
 
-        v = jnp.mean(v_abs, axis=2) + cn_ref[...]    # (BM, 2)
+        v = jnp.mean(v_abs, axis=2) + cn_ref[...].reshape(BM, 2)
         v = jnp.mean(v, axis=1)
 
         vr = vr_ref[...]
         full = float(2 ** p.adc_bits - 1)
         x = (v - vr[0, 0]) / jnp.maximum(vr[0, 1] - vr[0, 0], 1e-9)
-        code_ref[...] = jnp.clip(jnp.round(x * full), 0, full).astype(jnp.int32)
-        volt_ref[...] = v
+        code_ref[...] = jnp.clip(jnp.round(x * full), 0,
+                                 full).astype(jnp.int32).reshape(1, BM)
+        volt_ref[...] = v.reshape(1, BM)
 
     return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("params", "interpret"))
+def dima_md_batch(d, qs, col_gain, cap_eps, cmp_noise, read_noise,
+                  read_noise_b, cblp_noise, v_range, *,
+                  params: DimaParams = DimaParams(), interpret=None):
+    """d (M,256) uint8; qs (B,256); cmp/read noise (B,M,2,128); cblp
+    (B,M,2); v_range (1,2).  Returns (codes (B,M), volts (B,M)) in one
+    kernel launch."""
+    M = d.shape[0]
+    B = qs.shape[0]
+    assert M % BM == 0, M
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    codes, volts = pl.pallas_call(
+        _make_kernel(params),
+        grid=(B, M // BM),
+        in_specs=[
+            pl.BlockSpec((BM, 256), lambda b, i: (i, 0)),
+            pl.BlockSpec((1, 256), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, 128), lambda b, i: (0, 0)),
+            pl.BlockSpec((1, 128), lambda b, i: (0, 0)),
+            pl.BlockSpec((1, BM, 2, 128), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, BM, 2, 128), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, BM, 2, 128), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, BM, 2), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, 2), lambda b, i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, BM), lambda b, i: (b, i)),
+            pl.BlockSpec((1, BM), lambda b, i: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, M), jnp.int32),
+            jax.ShapeDtypeStruct((B, M), jnp.float32),
+        ],
+        interpret=interpret,
+    )(d, qs, col_gain.reshape(1, 128), cap_eps.reshape(1, 128),
+      cmp_noise, read_noise, read_noise_b, cblp_noise, v_range)
+    return codes, volts
 
 
 @functools.partial(jax.jit, static_argnames=("params", "interpret"))
@@ -64,35 +108,10 @@ def dima_md(d, q, col_gain, cap_eps, cmp_noise, read_noise, read_noise_b,
             cblp_noise, v_range, *, params: DimaParams = DimaParams(),
             interpret=None):
     """d (M,256) uint8; q (256,); cmp/read noise (M,2,128); cblp (M,2);
-    v_range (1,2).  Returns (codes (M,), volts (M,))."""
-    M = d.shape[0]
-    assert M % BM == 0, M
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
-    codes, volts = pl.pallas_call(
-        _make_kernel(params),
-        grid=(M // BM,),
-        in_specs=[
-            pl.BlockSpec((BM, 256), lambda i: (i, 0)),
-            pl.BlockSpec((1, 256), lambda i: (0, 0)),
-            pl.BlockSpec((1, 128), lambda i: (0, 0)),
-            pl.BlockSpec((1, 128), lambda i: (0, 0)),
-            pl.BlockSpec((BM, 2, 128), lambda i: (i, 0, 0)),
-            pl.BlockSpec((BM, 2, 128), lambda i: (i, 0, 0)),
-            pl.BlockSpec((BM, 2, 128), lambda i: (i, 0, 0)),
-            pl.BlockSpec((BM, 2), lambda i: (i, 0)),
-            pl.BlockSpec((1, 2), lambda i: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((BM,), lambda i: (i,)),
-            pl.BlockSpec((BM,), lambda i: (i,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((M,), jnp.int32),
-            jax.ShapeDtypeStruct((M,), jnp.float32),
-        ],
-        interpret=interpret,
-    )(d, q.reshape(1, 256), col_gain.reshape(1, 128),
-      cap_eps.reshape(1, 128), cmp_noise, read_noise, read_noise_b,
-      cblp_noise, v_range)
-    return codes, volts
+    v_range (1,2).  Returns (codes (M,), volts (M,)).  B=1 of
+    ``dima_md_batch``."""
+    codes, volts = dima_md_batch(
+        d, q.reshape(1, 256), col_gain, cap_eps, cmp_noise[None],
+        read_noise[None], read_noise_b[None], cblp_noise[None], v_range,
+        params=params, interpret=interpret)
+    return codes[0], volts[0]

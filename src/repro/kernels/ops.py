@@ -14,7 +14,9 @@ import numpy as np
 from repro.core.params import DimaParams
 from repro.kernels import ref as ref_mod
 from repro.kernels.dima_dp import dima_dp as _dima_dp_kernel
+from repro.kernels.dima_dp import dima_dp_batch as _dima_dp_batch_kernel
 from repro.kernels.dima_md import dima_md as _dima_md_kernel
+from repro.kernels.dima_md import dima_md_batch as _dima_md_batch_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.subrange_matmul import subrange_matmul as _subrange_kernel
 
@@ -110,6 +112,58 @@ def dima_md_banked(d, q, p: DimaParams = DimaParams(), chip=None, key=None,
                                    cmp_n, rn, rnb, cn, vr, params=p,
                                    interpret=interpret)
     return codes[:M], volts[:M]
+
+
+def _batch_noise(key, p: DimaParams, B, Mp, kind):
+    """Per-query noise stacks for the query-batched kernels: query j draws
+    from ``jax.random.split(key, B)[j]`` — the same per-query key layout
+    as the reference backend's matmat."""
+    if key is None:
+        return tuple(jnp.zeros((B,) + a.shape, a.dtype)
+                     for a in _expand_noise(None, p, Mp, kind))
+    keys = jax.random.split(key, B)
+    return jax.vmap(lambda k: _expand_noise(k, p, Mp, kind))(keys)
+
+
+def dima_dp_matmat(d, qs, p: DimaParams = DimaParams(), chip=None, key=None,
+                   v_range=None, interpret=None):
+    """Query-batched DP: d (M,256) uint8 rows vs queries qs (B,256).
+    Returns (codes (B,M), volts (B,M)) from ONE kernel launch — the grid
+    is (B, M/128), so the per-query Python loop disappears."""
+    M = d.shape[0]
+    B = qs.shape[0]
+    dp_ = _pad_to(jnp.asarray(d, jnp.uint8), 128, 0)
+    Mp = dp_.shape[0]
+    cg, ce, mg, mo = _chip_arrays(chip, p)
+    rn, cn = _batch_noise(key, p, B, Mp, "dp")
+    if v_range is None:
+        from repro.core.pipeline import dp_gain
+        v_range = (0.0, 255.0 * 255.0 * dp_gain(p))
+    vr = jnp.asarray([v_range], jnp.float32)
+    codes, volts = _dima_dp_batch_kernel(dp_, jnp.asarray(qs, jnp.uint8),
+                                         cg, ce, mg, mo, rn, cn, vr,
+                                         params=p, interpret=interpret)
+    return codes[:, :M], volts[:, :M]
+
+
+def dima_md_matmat(d, qs, p: DimaParams = DimaParams(), chip=None, key=None,
+                   v_range=None, interpret=None):
+    """Query-batched MD: d (M,256) rows vs queries qs (B,256).
+    Returns (codes (B,M), volts (B,M)) from one kernel launch."""
+    M = d.shape[0]
+    B = qs.shape[0]
+    dp_ = _pad_to(jnp.asarray(d, jnp.uint8), 128, 0)
+    Mp = dp_.shape[0]
+    cg, ce, mg, mo = _chip_arrays(chip, p)
+    cmp_n, rn, rnb, cn = _batch_noise(key, p, B, Mp, "md")
+    if v_range is None:
+        from repro.core.pipeline import md_gain
+        v_range = (0.0, 255.0 * md_gain(p))
+    vr = jnp.asarray([v_range], jnp.float32)
+    codes, volts = _dima_md_batch_kernel(dp_, jnp.asarray(qs, jnp.uint8),
+                                         cg, ce, cmp_n, rn, rnb, cn, vr,
+                                         params=p, interpret=interpret)
+    return codes[:, :M], volts[:, :M]
 
 
 def flash_attention_gqa(q, k, v, *, interpret=None):

@@ -2,13 +2,16 @@
 weights — the paper's inference technique as a serving feature.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
-        --batch 4 --prompt-len 32 --gen 16 --quant dima
+        --batch 4 --prompt-len 32 --gen 16 --quant dima --backend multibank
 
 ``--quant dima`` stores every matmul weight as sub-ranged offset-binary
 uint8 (quant/subrange.py) and (with --dima-noise) injects the calibrated
 analog noise model — the LM-scale version of Fig. 5's energy↔accuracy
-knob.  Reports tokens/s and, for the DIMA path, the modeled pJ/token from
-the multi-bank energy model (core/energy.py + core/mapping.py).
+knob.  Reports tokens/s and, for the DIMA path, the modeled pJ/token
+(core/energy.py + core/mapping.py).  ``--backend multibank`` prices
+tokens through the bank-sharded substrate's amortized CTRL model
+(``--n-banks`` overrides the paper's 32); the other analog backends use
+the single-bank model and ``digital`` the conventional architecture.
 """
 from __future__ import annotations
 
@@ -27,11 +30,16 @@ from repro.models import LM
 from repro.quant import DimaNoiseModel, quantize_params
 
 
-def dima_energy_per_token(cfg, p: DimaParams = DimaParams(), backend=None):
+def dima_energy_per_token(cfg, p: DimaParams = DimaParams(), backend=None,
+                          n_banks=None):
     """Modeled DIMA decode energy: every active weight byte is read once
-    per token through MR-FR banks (multi-bank amortized CTRL).  Routed
-    through the unified backend API so the substrate is swappable."""
-    be = dima_api.get_backend(backend or "reference", p)
+    per token through MR-FR banks.  Routed through the unified backend
+    API so the substrate is swappable — ``"multibank"`` amortizes the
+    fixed CTRL energy over its banks, everything else prices single-bank
+    (``"digital"``: the conventional architecture)."""
+    kw = ({"n_banks": n_banks}
+          if (backend == "multibank" and n_banks is not None) else {})
+    be = dima_api.get_backend(backend or "reference", p, **kw)
     return dima_api.weights_energy_per_token(cfg.active_param_count(), be)
 
 
@@ -76,9 +84,16 @@ def main(argv=None):
     ap.add_argument("--dima-noise", action="store_true")
     ap.add_argument("--backend", default="reference",
                     choices=sorted(dima_api.BACKENDS),
-                    help="DIMA substrate used for the energy model")
+                    help="DIMA substrate used for the energy model "
+                         "(multibank = bank-sharded, amortized CTRL)")
+    ap.add_argument("--n-banks", type=int, default=None,
+                    help="bank count for --backend multibank "
+                         "(default: the paper's 32-bank scenario)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.n_banks is not None and args.backend != "multibank":
+        ap.error(f"--n-banks only applies to --backend multibank "
+                 f"(got --backend {args.backend})")
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -92,13 +107,18 @@ def main(argv=None):
         params = quantize_params(params, bits=4 if args.quant == "dima4" else 8)
         if args.dima_noise:
             dima = DimaNoiseModel(key=jax.random.PRNGKey(args.seed + 1))
-        pj, banks = dima_energy_per_token(cfg, DimaParams(), args.backend)
+        pj, banks = dima_energy_per_token(cfg, DimaParams(), args.backend,
+                                          args.n_banks)
         if args.backend == "digital":   # bank-less conventional architecture
             where = f"{cfg.active_param_count():,} weight bytes/token"
             amort = "conventional fetch-then-compute"
+        elif args.backend == "multibank":
+            nb = args.n_banks or DimaParams().n_banks_multibank
+            where = f"{banks:,} SRAM banks"
+            amort = f"multi-bank ×{nb}, amortized CTRL"
         else:
             where = f"{banks:,} SRAM banks"
-            amort = "multi-bank"
+            amort = "single-bank"
         print(f"[serve] DIMA weights: {where}, modeled {pj/1e6:.2f} µJ/token "
               f"({args.backend} backend, {amort})")
 

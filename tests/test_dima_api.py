@@ -122,12 +122,15 @@ def test_get_backend_factory():
     be = dima.get_backend("reference", P, CHIP)
     assert dima.get_backend(be) is be            # pass-through
     assert be.ideal().chip is None and be.ideal().p is P
-    with pytest.raises(ValueError, match="unknown backend"):
+    with pytest.raises(KeyError, match="unknown backend"):
         dima.get_backend("fpga")
 
 
 def test_auto_dispatch():
-    auto = dima.get_backend("auto", P, CHIP)
+    # min_rows pinned: the dispatch logic under test must not depend on
+    # whatever measured crossover a local bench run left in
+    # BENCH_dima_api.json (covered by test_multibank)
+    auto = dima.get_backend("auto", P, CHIP, min_rows=128)
     assert type(auto.pick(D, Q)).name == "pallas"          # large bank
     assert type(auto.pick(D[:4], Q)).name == "reference"   # small batch
     assert type(auto.pick(D[0], Q)).name == "reference"    # single op

@@ -1,0 +1,310 @@
+"""Multi-bank sharded execution layer: digital-merge correctness vs
+per-bank reference runs (bit-for-bit), n_banks=1 parity, ragged row
+counts, amortized cost model, pallas matmat kernel, and the device-mesh
+(shard_map) fan-out."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import dima
+from repro.core import energy as en
+from repro.core import noise as noise_mod
+from repro.core.params import DimaParams
+
+P = DimaParams()
+rng = np.random.default_rng(0)
+D = jnp.asarray(rng.integers(0, 256, (200, 256)))
+Q = jnp.asarray(rng.integers(0, 256, (256,)))
+QS = jnp.asarray(rng.integers(0, 256, (3, 256)))
+CHIP = noise_mod.sample_chip(jax.random.PRNGKey(3), P)
+KEY = jax.random.PRNGKey(9)
+
+
+# ---------------------------------------------------------------------------
+# digital merge == per-bank inner runs, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["dp", "md"])
+def test_matvec_is_digital_merge_of_bank_runs(mode):
+    """The load-bearing contract: a multibank matvec IS the concatenation
+    of per-bank reference runs with fold_in(key, bank) keys — codes and
+    volts bitwise identical, cycle/conversion totals bank-invariant."""
+    mb = dima.get_backend("multibank", P, CHIP, n_banks=4)
+    ref = dima.get_backend("reference", P, CHIP)
+    out = mb.matvec(D, Q, mode=mode, key=KEY)
+    parts = [ref.matvec(D[a:z], Q, mode=mode,
+                        key=jax.random.fold_in(KEY, b))
+             for b, (a, z) in enumerate(mb.bank_slices(D.shape[0]))]
+    np.testing.assert_array_equal(
+        np.asarray(out.code),
+        np.concatenate([np.asarray(o.code) for o in parts]))
+    np.testing.assert_array_equal(
+        np.asarray(out.volts),
+        np.concatenate([np.asarray(o.volts) for o in parts]))
+    unbanked = ref.matvec(D, Q, mode=mode)
+    assert out.n_cycles == unbanked.n_cycles
+    assert out.n_conversions == unbanked.n_conversions
+
+
+def test_acceptance_4096x256():
+    """The ISSUE's acceptance shape: 4096×256 through 32 banks matches
+    the digital merge of per-bank reference runs bit-for-bit, and the
+    cost is within 2% of the paper's 231.2 pJ multi-bank MF row."""
+    big = jnp.asarray(rng.integers(0, 256, (4096, 256)))
+    mb = dima.get_backend("multibank", P)
+    assert mb.n_banks == 32
+    ref = dima.get_backend("reference", P)
+    out = mb.matvec(big, Q, key=KEY)
+    merged = np.concatenate(
+        [np.asarray(ref.matvec(big[a:z], Q,
+                               key=jax.random.fold_in(KEY, b)).code)
+         for b, (a, z) in enumerate(mb.bank_slices(4096))])
+    np.testing.assert_array_equal(np.asarray(out.code), merged)
+    cost = mb.decision_cost(256)
+    assert abs(cost.energy_pj - en.PAPER_TABLE["mf"][1]) \
+        / en.PAPER_TABLE["mf"][1] < 0.02
+
+
+def test_nbanks1_parity_with_reference():
+    """One bank = the unbanked substrate: zero-noise results identical;
+    with noise, bank 0's stream is fold_in(key, 0) by construction."""
+    mb = dima.get_backend("multibank", P, CHIP, n_banks=1)
+    ref = dima.get_backend("reference", P, CHIP)
+    a, b = mb.matvec(D, Q), ref.matvec(D, Q)
+    np.testing.assert_array_equal(np.asarray(a.code), np.asarray(b.code))
+    np.testing.assert_array_equal(np.asarray(a.volts), np.asarray(b.volts))
+    n = mb.matvec(D, Q, key=KEY)
+    r = ref.matvec(D, Q, key=jax.random.fold_in(KEY, 0))
+    np.testing.assert_array_equal(np.asarray(n.code), np.asarray(r.code))
+
+
+@pytest.mark.parametrize("m,n_banks", [(50, 8), (5, 8), (200, 7)])
+def test_ragged_row_counts(m, n_banks):
+    """Rows not divisible by bank count: last bank ragged, trailing banks
+    empty — output still (m,) and still the exact digital merge."""
+    mb = dima.get_backend("multibank", P, n_banks=n_banks)
+    ref = dima.get_backend("reference", P)
+    slices = mb.bank_slices(m)
+    assert slices[0][0] == 0 and slices[-1][1] == m
+    assert all(a2 == z1 for (_, z1), (a2, _) in zip(slices, slices[1:]))
+    out = mb.matvec(D[:m], Q, key=KEY)
+    assert out.code.shape == (m,) and out.n_conversions == m
+    merged = np.concatenate(
+        [np.asarray(ref.matvec(D[a:z], Q,
+                               key=jax.random.fold_in(KEY, b)).code)
+         for b, (a, z) in enumerate(slices)])
+    np.testing.assert_array_equal(np.asarray(out.code), merged)
+
+
+def test_matmat_merge_and_pallas_inner():
+    """matmat shards rows and merges codes on axis 1; the pallas inner
+    runs each bank as one query-batched kernel launch and agrees with the
+    reference inner exactly at zero noise."""
+    for inner in ("reference", "pallas"):
+        mb = dima.get_backend("multibank", P, inner=inner, n_banks=4)
+        out = mb.matmat(D, QS)
+        assert out.code.shape == (3, 200)
+        ref = dima.get_backend("reference", P).matmat(D, QS)
+        np.testing.assert_array_equal(np.asarray(out.code),
+                                      np.asarray(ref.code))
+    noisy = dima.get_backend("multibank", P, inner="pallas",
+                             n_banks=4).matmat(D, QS, key=KEY)
+    assert noisy.code.shape == (3, 200)
+
+
+def test_dot_delegates_and_apps_run():
+    """Single ops delegate to the inner substrate (one op = one bank), so
+    the calibration layer and the broadcast-layout apps work unchanged."""
+    mb = dima.get_backend("multibank", P, CHIP, n_banks=4)
+    ref = dima.get_backend("reference", P, CHIP)
+    a = mb.dot(D[0], Q, key=KEY)
+    b = ref.dot(D[0], Q, key=KEY)
+    np.testing.assert_array_equal(np.asarray(a.code), np.asarray(b.code))
+    assert mb.ideal().chip is None and mb.ideal().n_banks == 4
+    from repro.core.applications import run_tm
+    r = run_tm(P, CHIP, KEY, backend="multibank")
+    assert abs(r.acc_dima - r.acc_digital) <= 0.02 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+def test_amortized_cost_model():
+    mb = dima.get_backend("multibank", P)
+    single = en.dima_decision(P, 256)
+    multi = mb.decision_cost(256)
+    assert multi.energy_pj < single.energy_pj
+    # the fixed split is exactly what the merge path charges per bank
+    assert en.bank_fixed_split(P) == pytest.approx(P.e_fixed_conv_pj / 32)
+    assert multi.energy_pj == pytest.approx(
+        single.energy_pj - P.e_fixed_conv_pj + en.bank_fixed_split(P))
+    # a non-default bank count amortizes by its own count
+    mb8 = dima.get_backend("multibank", P, n_banks=8)
+    assert mb8.decision_cost(256).energy_pj == pytest.approx(
+        single.energy_pj - P.e_fixed_conv_pj + P.e_fixed_conv_pj / 8)
+    assert mb8.bank_fixed_pj == pytest.approx(P.e_fixed_conv_pj / 8)
+
+
+def test_weights_energy_per_token_switches_on_backend():
+    n_active = 1_000_000
+    pj_single, _ = dima.weights_energy_per_token(
+        n_active, dima.get_backend("reference", P))
+    pj_multi, banks = dima.weights_energy_per_token(
+        n_active, dima.get_backend("multibank", P))
+    pj_forced, _ = dima.weights_energy_per_token(
+        n_active, dima.get_backend("reference", P), multi_bank=True)
+    assert pj_multi < pj_single            # amortized CTRL
+    assert pj_forced == pytest.approx(pj_multi)   # explicit what-if
+
+
+# ---------------------------------------------------------------------------
+# device-mesh fan-out
+# ---------------------------------------------------------------------------
+
+def test_mesh_path_matches_host_path_single_device():
+    """bank_mesh degenerates to one shard on one device but still runs
+    the shard_map code path — results must match the host fan-out
+    bitwise."""
+    from repro.distributed.sharding import bank_mesh
+    mesh = bank_mesh(8)
+    mb_mesh = dima.get_backend("multibank", P, CHIP, n_banks=8, mesh=mesh)
+    mb_host = dima.get_backend("multibank", P, CHIP, n_banks=8)
+    a = mb_mesh.matvec(D[:160], Q, key=KEY)
+    b = mb_host.matvec(D[:160], Q, key=KEY)
+    np.testing.assert_array_equal(np.asarray(a.code), np.asarray(b.code))
+    np.testing.assert_allclose(np.asarray(a.volts), np.asarray(b.volts),
+                               atol=1e-7)
+
+
+def test_mesh_path_rejects_ragged():
+    from repro.distributed.sharding import bank_mesh
+    mb = dima.get_backend("multibank", P, n_banks=8, mesh=bank_mesh(8))
+    with pytest.raises(ValueError, match="ragged"):
+        mb.matvec(D[:50], Q)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="single-device runtime; multi-device fan-out "
+                           "covered by the subprocess smoke test")
+def test_mesh_path_multi_device():
+    from repro.distributed.sharding import bank_mesh
+    mesh = bank_mesh(8)
+    assert mesh.shape["banks"] > 1
+    mb_mesh = dima.get_backend("multibank", P, n_banks=8, mesh=mesh)
+    mb_host = dima.get_backend("multibank", P, n_banks=8)
+    a = mb_mesh.matvec(D[:160], Q, key=KEY)
+    b = mb_host.matvec(D[:160], Q, key=KEY)
+    np.testing.assert_array_equal(np.asarray(a.code), np.asarray(b.code))
+
+
+@pytest.mark.slow
+def test_mesh_smoke_subprocess_four_devices():
+    """Real multi-device shard_map fan-out: re-launch with 4 forced host
+    devices and assert mesh == host bitwise."""
+    prog = textwrap.dedent("""
+        import jax, numpy as np, jax.numpy as jnp
+        from repro import dima
+        from repro.distributed.sharding import bank_mesh
+        assert len(jax.devices()) == 4
+        P = dima.DimaParams()
+        rng = np.random.default_rng(0)
+        D = jnp.asarray(rng.integers(0, 256, (256, 256)))
+        Q = jnp.asarray(rng.integers(0, 256, (256,)))
+        KEY = jax.random.PRNGKey(9)
+        mesh = bank_mesh(8)
+        assert mesh.shape["banks"] == 4
+        a = dima.get_backend("multibank", P, n_banks=8,
+                             mesh=mesh).matvec(D, Q, key=KEY)
+        b = dima.get_backend("multibank", P,
+                             n_banks=8).matvec(D, Q, key=KEY)
+        np.testing.assert_array_equal(np.asarray(a.code),
+                                      np.asarray(b.code))
+        print("MESH_OK")
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH",
+                                                              ""))
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "MESH_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# registry / dispatch satellites
+# ---------------------------------------------------------------------------
+
+def test_get_backend_typo_raises_keyerror_with_names():
+    with pytest.raises(KeyError, match="registered backends"):
+        dima.get_backend("multibanc")
+    with pytest.raises(KeyError, match="multibank"):
+        dima.get_backend("multibanc")          # close-match hint
+
+
+def test_pallas_rejects_unimplemented_mode():
+    pal = dima.get_backend("pallas", P)
+    for op in (pal.matvec, pal.matmat):
+        with pytest.raises(ValueError, match="unknown mode"):
+            op(D, QS if op is pal.matmat else Q, mode="xor")
+    # a hypothetical future MODES entry must not silently fall through
+    orig = dima.MODES
+    try:
+        import repro.core.api as api_mod
+        api_mod.MODES = ("dp", "md", "xnor")
+        with pytest.raises(ValueError, match="reference"):
+            pal.matvec(D, Q, mode="xnor")
+    finally:
+        api_mod.MODES = orig
+
+
+def test_auto_min_rows_from_measured_crossover(tmp_path, monkeypatch):
+    bench = tmp_path / "BENCH_dima_api.json"
+    bench.write_text(json.dumps({"auto_crossover_rows": 64}))
+    monkeypatch.setenv("DIMA_BENCH_JSON", str(bench))
+    auto = dima.get_backend("auto", P)
+    assert auto.min_rows == 64
+    assert type(auto.pick(D[:64], Q)).name == "pallas"
+    # absent / null crossover falls back to the static default
+    bench.write_text(json.dumps({"auto_crossover_rows": None}))
+    assert dima.get_backend("auto", P).min_rows == 128
+    monkeypatch.setenv("DIMA_BENCH_JSON", str(tmp_path / "missing.json"))
+    assert dima.get_backend("auto", P).min_rows == 128
+    # explicit min_rows always wins
+    assert dima.get_backend("auto", P, min_rows=7).min_rows == 7
+
+
+def test_multibank_rejects_nested_inner():
+    with pytest.raises(ValueError, match="single-bank"):
+        dima.get_backend("multibank", P,
+                         inner=dima.get_backend("multibank", P))
+
+
+def test_multibank_rejects_bad_bank_count_and_mesh_inner():
+    with pytest.raises(ValueError, match="n_banks"):
+        dima.get_backend("multibank", P, n_banks=0)
+    # the mesh path runs the reference pipeline per shard: any other
+    # inner must fail at construction, not silently diverge from the
+    # host path
+    from repro.distributed.sharding import bank_mesh
+    for inner in ("pallas", "digital"):
+        with pytest.raises(ValueError, match="reference pipeline"):
+            dima.get_backend("multibank", P, inner=inner, n_banks=8,
+                             mesh=bank_mesh(8))
+
+
+def test_measured_min_rows_is_cwd_independent(tmp_path, monkeypatch):
+    """AutoBackend dispatch must not change with the launch directory:
+    the default bench path anchors at the repo root, not the CWD."""
+    monkeypatch.delenv("DIMA_BENCH_JSON", raising=False)
+    here = dima.measured_min_rows()
+    monkeypatch.chdir(tmp_path)
+    assert dima.measured_min_rows() == here

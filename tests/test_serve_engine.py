@@ -84,6 +84,24 @@ def test_engine_dima_energy_accounting():
     assert abs(eng.stats["energy_pj"] - 3 * pj) < 1e-6 * pj
 
 
+def test_engine_multibank_energy_switching():
+    """--backend multibank prices tokens through the amortized CTRL
+    model; the single-bank reference substrate prices higher."""
+    from repro import dima as dima_api
+    from repro.quant import DimaNoiseModel
+    cfg, model, params = _setup(quant=True)
+    pj = {}
+    for backend in ("reference", "multibank"):
+        eng = ServeEngine(model, params, bucket=8, max_batch=1,
+                          dima=DimaNoiseModel(key=jax.random.PRNGKey(3)),
+                          backend=backend)
+        pj[backend] = eng._pj_per_token
+    assert pj["multibank"] < pj["reference"]
+    expected, _ = dima_api.weights_energy_per_token(
+        cfg.active_param_count(), dima_api.get_backend("multibank"))
+    assert pj["multibank"] == expected
+
+
 def test_engine_dima_quantized():
     cfg, model, params = _setup(quant=True)
     eng = ServeEngine(model, params, bucket=8, max_batch=2)
