@@ -13,6 +13,8 @@ BENCH_dima_api.json carries, besides the loop-vs-vectorized matvec
 numbers, the single-bank vs multibank comparison (``multibank``) and the
 measured reference↔pallas crossover (``auto_crossover_rows``) that
 ``repro.dima.get_backend("auto")`` picks up on the next run.
+BENCH_serving.json (bench_serving.py) carries the bucketed-vs-continuous
+scheduler comparison.  Artifact schemas: docs/benchmarks.md.
 """
 from __future__ import annotations
 
@@ -37,7 +39,7 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import bench_apps, bench_conventional, bench_dima
-    from benchmarks import roofline
+    from benchmarks import bench_serving, roofline
 
     rows = []
     details = {}
@@ -93,6 +95,15 @@ def main(argv=None) -> None:
     api["auto_crossover_platform"] = cross["auto_crossover_platform"]
     rows.append(("dima_auto_crossover", 0,
                  f"min_rows={cross['auto_crossover_rows']}"))
+
+    # scheduler comparison (bucketed vs continuous ServeEngine under a
+    # Poisson trace) — emits its own BENCH_serving(.smoke).json artifact
+    serving = bench_serving.compare(smoke=args.smoke)
+    bench_serving.write_json(serving, smoke=args.smoke)
+    rows.append(("serving_schedulers", 0,
+                 f"continuous/bucketed={serving['speedup_tokens_per_s']}x;"
+                 f"p99={serving['continuous']['latency_p99_s']}s"))
+    details["serving"] = serving
 
     details["dima_api"] = api
     # full runs refresh the committed repo-root artifact (which

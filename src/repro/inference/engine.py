@@ -1,16 +1,25 @@
-"""Batched serving engine: request queue → bucketed admission → prefill →
-synchronized decode, with optional DIMA-quantized weights.
+"""Batched serving engine: request queue → slot table → prefill →
+per-slot decode, with optional DIMA-quantized weights.
 
-Batching model: *bucketed static batching* — requests are grouped by
-prompt length (bucket = rounded-up length), each bucket decodes in
-lockstep sharing one scalar position.  This matches the dry-run's
-`serve_step` contract (one position per batch).  Continuous batching
-(per-slot positions) needs a vmapped per-row cache write — still the
-next open ROADMAP item; the rest of the engine (queue, slots,
-accounting) is already shaped for it.  Backend switching, by contrast,
-is now real: ``backend`` accepts any registered ``repro.dima`` substrate
-name (or instance), including ``"multibank"``, whose bank-sharded
-execution and amortized cost model flow through decode unchanged.
+Two schedulers (see docs/serving.md for the full design note):
+
+* ``continuous`` (default) — a fixed slot table of ``max_batch`` rows.
+  Each slot carries its own position; a request is admitted into a free
+  slot the moment one frees (no bucket barrier), prefilled alone
+  (B=1 cache, scattered into its slot row), and every decode step
+  advances all live slots in lockstep through ONE jitted
+  ``model.decode_step`` call with a (B,) positions vector — the
+  KV-cache write is a vmapped per-row scatter
+  (``cache.at[row, pos_row]``-style, models/attention.py).
+* ``bucketed`` — the legacy static path: requests grouped by padded
+  prompt length, each bucket decodes to completion sharing one scalar
+  position.  Kept as a fallback for one release and as the oracle the
+  continuous scheduler is tested token-identical against.
+
+Backend switching is shared by both: ``backend`` accepts any registered
+``repro.dima`` substrate name (or instance), including ``"multibank"``,
+whose bank-sharded execution and amortized cost model flow through
+decode unchanged.
 
 Energy accounting: every generated token is priced through the unified
 ``repro.dima`` backend API (``weights_energy_per_token``) when a DIMA
@@ -18,7 +27,9 @@ noise model is attached — the ``backend`` parameter picks the substrate
 whose cost model applies: the amortized multi-bank model for
 ``"multibank"`` (the only substrate that executes bank-sharded), the
 single-bank DIMA model for ``"reference"``/``"pallas"``, and the
-conventional fetch-then-compute architecture for ``"digital"``.
+conventional fetch-then-compute architecture for ``"digital"``.  Both
+schedulers charge the same per-token price (per-request totals live on
+``Request.energy_pj``), so the paths stay energy-parity by construction.
 """
 from __future__ import annotations
 
@@ -41,11 +52,20 @@ class Request:
     out: list = field(default_factory=list)
     submitted_at: float = field(default_factory=time.time)
     done: bool = False
+    done_at: float = 0.0            # set when the last token is emitted
+    energy_pj: float = 0.0          # per-request share of the DIMA model
 
 
 class ServeEngine:
+    """``scheduler="continuous"`` (default) or ``"bucketed"`` (legacy
+    static batching, one release of fallback)."""
+
     def __init__(self, model, params, *, bucket: int = 32, max_batch: int = 8,
-                 max_len: int = 512, dima=None, backend="reference"):
+                 max_len: int = 512, dima=None, backend="reference",
+                 scheduler: str = "continuous"):
+        if scheduler not in ("continuous", "bucketed"):
+            raise ValueError(f"unknown scheduler {scheduler!r} "
+                             "(choose 'continuous' or 'bucketed')")
         self.model = model
         self.params = params
         self.bucket = bucket
@@ -53,21 +73,185 @@ class ServeEngine:
         self.max_len = max_len
         self.dima = dima
         self.backend = dima_api.get_backend(backend)
+        self.scheduler = scheduler
         self.queue: list[Request] = []
-        self.stats = {"requests": 0, "tokens": 0, "batches": 0,
+        # batches = bucketed admissions; steps = continuous decode steps
+        self.stats = {"requests": 0, "tokens": 0, "batches": 0, "steps": 0,
                       "energy_pj": 0.0}
         self._pj_per_token = 0.0
         self.n_banks = 0
         if dima is not None:             # DIMA-quantized weights in use
             self._pj_per_token, self.n_banks = dima_api.weights_energy_per_token(
                 model.cfg.active_param_count(), self.backend)
+        # one jit root for both schedulers: pos is a scalar (bucketed) or
+        # a (B,) per-slot vector (continuous) — distinct avals, so each
+        # scheduler compiles its own specialization of the same function
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode_step(p, c, pos, tokens=t,
                                                    dima=dima))
+        self._prefill = jax.jit(
+            lambda p, c, t: model.prefill(p, c, tokens=t, dima=dima))
+        self._slots_ready = False
+
+    # -- shared -----------------------------------------------------------
+
+    def _blen(self, req: Request) -> int:
+        return -(-len(req.prompt) // self.bucket) * self.bucket
 
     def submit(self, req: Request):
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if self._blen(req) > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt of {len(req.prompt)} tokens pads "
+                f"to {self._blen(req)} (bucket={self.bucket}) > "
+                f"max_len={self.max_len}")
         self.queue.append(req)
         self.stats["requests"] += 1
+
+    def _capacity_cap(self, blen: int) -> int:
+        """Most tokens a request admitted at padded length ``blen`` can
+        ever emit: the prefill argmax plus one per remaining cache row
+        (token k's KV is written at blen+k-1 on the next step).  Both
+        schedulers truncate on this — the continuous path by slot
+        eviction, the bucketed path explicitly — so outputs stay
+        token-identical even when a request would overrun the cache."""
+        return max(self.max_len - blen + 1, 1)
+
+    def _account(self, req: Request, n_tokens: int = 1):
+        self.stats["tokens"] += n_tokens
+        self.stats["energy_pj"] += n_tokens * self._pj_per_token
+        req.energy_pj += n_tokens * self._pj_per_token
+
+    def _finish(self, req: Request):
+        req.done = True
+        req.done_at = time.time()
+
+    def _padded_prompt(self, req: Request, blen: int) -> np.ndarray:
+        """Right-align the prompt in ``blen`` rows by repeating the first
+        token (positions stay 0..blen-1; the extra prefix tokens are the
+        request's own, so no cross-contamination).  Identical between
+        schedulers — the parity tests rely on it."""
+        toks = np.zeros((1, blen), np.int32)
+        pad = blen - len(req.prompt)
+        toks[0, :pad] = req.prompt[0]
+        toks[0, pad:] = req.prompt
+        return toks
+
+    @property
+    def busy(self) -> bool:
+        """True while requests are queued or occupy slots."""
+        return bool(self.queue) or any(r is not None for r in self._live())
+
+    def run(self):
+        """Drain the queue; returns completed requests."""
+        done = []
+        if self.scheduler == "bucketed":
+            while self.queue:
+                done.extend(self.run_once())
+            return done
+        while self.busy:
+            done.extend(self.step())
+        return done
+
+    # -- continuous scheduler ---------------------------------------------
+
+    def _live(self):
+        return self._slot_req if self._slots_ready else []
+
+    def _ensure_slots(self):
+        if self._slots_ready:
+            return
+        B, L = self.max_batch, self.max_len
+        self._slot_req: list[Optional[Request]] = [None] * B
+        self._slot_pos = np.full((B,), L - 1, np.int32)   # parked
+        self._slot_last = np.zeros((B,), np.int32)
+        self._cache = self.model.init_cache(B, L)
+        # per-leaf batch axis, discovered abstractly: the one dim that
+        # changes with the batch argument (arch-agnostic — uniform stacks
+        # layers in front, xlstm nests superblocks)
+        a = jax.eval_shape(lambda: self.model.init_cache(1, L))
+        b = jax.eval_shape(lambda: self.model.init_cache(2, L))
+        axes = jax.tree_util.tree_map(
+            lambda x, y: next((i for i, (p, q) in
+                               enumerate(zip(x.shape, y.shape)) if p != q),
+                              -1), a, b)          # -1: batchless (shared) leaf
+
+        def insert(cache, sub, row):
+            return jax.tree_util.tree_map(
+                lambda big, small, ax: big if ax < 0 else
+                jax.lax.dynamic_update_slice_in_dim(
+                    big, small.astype(big.dtype), row, axis=ax),
+                cache, sub, axes)
+
+        self._insert = jax.jit(insert)
+        self._slots_ready = True
+
+    def _admit(self) -> list[Request]:
+        """Fill free slots from the queue (FIFO). Prefill is per-request
+        (B=1) and scattered into the slot row; the prefill's argmax is the
+        request's first generated token.  Returns requests that complete
+        during admission (max_new <= 1 or a cache-filling prompt)."""
+        finished = []
+        for slot in range(self.max_batch):
+            if not self.queue:
+                break
+            if self._slot_req[slot] is not None:
+                continue
+            r = self.queue.pop(0)
+            if r.max_new <= 0:                   # nothing to generate
+                self._finish(r)
+                finished.append(r)
+                continue
+            blen = self._blen(r)
+            sub = self.model.init_cache(1, self.max_len)
+            logits, sub = self._prefill(self.params, sub,
+                                        jnp.asarray(self._padded_prompt(r, blen)))
+            self._cache = self._insert(self._cache, sub, slot)
+            nxt = int(jnp.argmax(logits, -1)[0])
+            r.out.append(nxt)
+            self._account(r)
+            if len(r.out) >= r.max_new or blen >= self.max_len:
+                self._finish(r)                  # prefill token was enough
+                finished.append(r)
+                continue
+            self._slot_req[slot] = r
+            self._slot_pos[slot] = blen
+            self._slot_last[slot] = nxt
+        return finished
+
+    def step(self) -> list[Request]:
+        """One scheduler tick: admit into free slots, then advance every
+        live slot one token (free slots ride along parked at the last
+        cache row — their writes land in their own unused row and are
+        fully overwritten by the next admission's scatter).  Returns the
+        requests completed during this tick."""
+        self._ensure_slots()
+        finished = self._admit()
+        live = [i for i in range(self.max_batch)
+                if self._slot_req[i] is not None]
+        if not live:
+            return finished
+        logits, self._cache = self._decode(
+            self.params, self._cache,
+            jnp.asarray(self._slot_last[:, None]),
+            jnp.asarray(self._slot_pos))
+        nxt = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
+        self.stats["steps"] += 1
+        for i in live:
+            r = self._slot_req[i]
+            r.out.append(int(nxt[i]))
+            self._account(r)
+            self._slot_last[i] = nxt[i]
+            self._slot_pos[i] += 1
+            if len(r.out) >= r.max_new or self._slot_pos[i] >= self.max_len:
+                self._finish(r)
+                finished.append(r)
+                self._slot_req[i] = None
+                self._slot_pos[i] = self.max_len - 1   # park
+        return finished
+
+    # -- bucketed scheduler (legacy fallback) -----------------------------
 
     def _take_bucket(self):
         """Group queued requests by padded prompt length."""
@@ -75,8 +259,7 @@ class ServeEngine:
             return None, []
         buckets = {}
         for r in self.queue:
-            blen = -(-len(r.prompt) // self.bucket) * self.bucket
-            buckets.setdefault(blen, []).append(r)
+            buckets.setdefault(self._blen(r), []).append(r)
         blen, reqs = max(buckets.items(), key=lambda kv: len(kv[1]))
         take = reqs[: self.max_batch]
         for r in take:
@@ -90,23 +273,17 @@ class ServeEngine:
         if not reqs:
             return []
         B = len(reqs)
-        gen = max(r.max_new for r in reqs)
-        # right-align prompts in the bucket by repeating the first token
-        # (same positions for all; extra prefix tokens are the request's
-        # own, so no cross-contamination)
-        toks = np.zeros((B, blen), np.int32)
-        for i, r in enumerate(reqs):
-            pad = blen - len(r.prompt)
-            toks[i, :pad] = r.prompt[0]
-            toks[i, pad:] = r.prompt
-        toks = jnp.asarray(toks)
+        gen = min(max(r.max_new for r in reqs), self._capacity_cap(blen))
+        toks = jnp.asarray(np.concatenate(
+            [self._padded_prompt(r, blen) for r in reqs], axis=0))
 
         cache = self.model.init_cache(B, min(blen + gen, self.max_len))
-        logits, cache = self.model.prefill(self.params, cache, tokens=toks,
-                                           dima=self.dima)
+        logits, cache = self._prefill(self.params, cache, toks)
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)
         for i, r in enumerate(reqs):
-            r.out.append(int(nxt[i]))
+            if len(r.out) < r.max_new:
+                r.out.append(int(nxt[i]))
+                self._account(r)
         for t in range(gen - 1):
             logits, cache = self._decode(self.params, cache, nxt[:, None],
                                          jnp.asarray(blen + t, jnp.int32))
@@ -114,16 +291,8 @@ class ServeEngine:
             for i, r in enumerate(reqs):
                 if len(r.out) < r.max_new:
                     r.out.append(int(nxt[i]))
+                    self._account(r)
         for r in reqs:
-            r.done = True
-        n_new = sum(len(r.out) for r in reqs)
-        self.stats["tokens"] += n_new
-        self.stats["energy_pj"] += n_new * self._pj_per_token
+            self._finish(r)
         self.stats["batches"] += 1
         return reqs
-
-    def run(self):
-        done = []
-        while self.queue:
-            done.extend(self.run_once())
-        return done

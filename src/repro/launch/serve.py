@@ -4,6 +4,13 @@ weights — the paper's inference technique as a serving feature.
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
         --batch 4 --prompt-len 32 --gen 16 --quant dima --backend multibank
 
+Requests route through ``inference.ServeEngine``; ``--scheduler``
+selects continuous batching (default: per-slot positions, vmapped
+per-row cache writes — docs/serving.md) or the legacy ``bucketed``
+static path (kept as a fallback for one release).  Frontend-embedding
+archs (``external_embed``) stay on the static ``generate()`` path — the
+engine's slot table is token-id based.
+
 ``--quant dima`` stores every matmul weight as sub-ranged offset-binary
 uint8 (quant/subrange.py) and (with --dima-noise) injects the calibrated
 analog noise model — the LM-scale version of Fig. 5's energy↔accuracy
@@ -26,6 +33,7 @@ from repro import dima as dima_api
 from repro.configs import RunConfig, get_arch, reduced
 from repro.core.params import DimaParams
 from repro.distributed.sharding import ShardCtx
+from repro.inference import Request, ServeEngine
 from repro.models import LM
 from repro.quant import DimaNoiseModel, quantize_params
 
@@ -80,6 +88,10 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=["continuous", "bucketed"],
+                    help="engine batching policy (bucketed = legacy static "
+                         "path, fallback for one release)")
     ap.add_argument("--quant", default="none", choices=["none", "dima", "dima4"])
     ap.add_argument("--dima-noise", action="store_true")
     ap.add_argument("--backend", default="reference",
@@ -125,11 +137,26 @@ def main(argv=None):
     toks = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
                               cfg.vocab_size)
     t0 = time.time()
-    out = generate(model, params, toks, args.gen, dima=dima)
+    if cfg.external_embed:
+        # frontend-embedding archs bypass the engine's token slot table
+        out = generate(model, params, toks, args.gen, dima=dima)
+    else:
+        eng = ServeEngine(
+            model, params, bucket=args.prompt_len, max_batch=args.batch,
+            max_len=args.prompt_len + args.gen, dima=dima,
+            backend=(dima_api.get_backend(args.backend)
+                     if args.n_banks is None else
+                     dima_api.get_backend(args.backend, n_banks=args.n_banks)),
+            scheduler=args.scheduler)
+        prompts = np.asarray(toks, np.int32)
+        for i in range(args.batch):
+            eng.submit(Request(rid=i, prompt=prompts[i], max_new=args.gen))
+        done = sorted(eng.run(), key=lambda r: r.rid)
+        out = jnp.asarray(np.stack([r.out for r in done]))
     dt = time.time() - t0
     n_tok = args.batch * args.gen
     print(f"[serve] generated {out.shape} in {dt:.2f}s "
-          f"({n_tok/dt:.1f} tok/s incl. compile)")
+          f"({n_tok/dt:.1f} tok/s incl. compile, {args.scheduler} scheduler)")
     print("[serve] sample:", np.asarray(out[0][:12]))
     return out
 

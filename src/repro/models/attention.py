@@ -100,7 +100,9 @@ def flash_attention(q, k, v, *, cfg, ctx: ShardCtx, window=0, q_offset=0):
 
 def decode_attention(q, k_cache, v_cache, *, cfg, ctx: ShardCtx, pos, window=0):
     """q: (B, 1, H, dh); caches: (B, Smax, KV, dh) sharded on seq.
-    ``pos`` scalar int32 = index of the new token (cache already updated)."""
+    ``pos``: index of the new token (cache already updated) — scalar int32
+    shared across the batch, or a (B,) vector of per-row positions
+    (continuous batching)."""
     B, _, H, dh = q.shape
     Smax, KV = k_cache.shape[1], k_cache.shape[2]
     G = H // KV
@@ -111,13 +113,35 @@ def decode_attention(q, k_cache, v_cache, *, cfg, ctx: ShardCtx, pos, window=0):
                    preferred_element_type=jnp.float32) * scale
     kpos = jnp.arange(Smax, dtype=jnp.int32)
     win = jnp.asarray(window, dtype=jnp.int32)
-    mask = kpos <= pos
-    mask = jnp.logical_and(mask, jnp.where(win > 0, pos - kpos < win, True))
-    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    # (1, 1) for a shared scalar, (B, 1) per-row — one mask path for both
+    posb = jnp.reshape(jnp.asarray(pos, jnp.int32), (-1, 1))
+    mask = kpos[None, :] <= posb
+    mask = jnp.logical_and(mask,
+                           jnp.where(win > 0, posb - kpos[None, :] < win, True))
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
     return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+def _row_update(arr, val, pos):
+    """Vmapped per-row cache scatter: row ``b`` of ``arr`` (B, S, ...)
+    gets ``val[b]`` (1, ...) written at sequence index ``pos[b]`` — the
+    ``cache.at[row, pos_row]``-style write continuous batching needs.
+    OOB positions clamp (free slots park at the last row)."""
+    def one(a, v, p):
+        return jax.lax.dynamic_update_slice(a, v, (p,) + (0,) * (a.ndim - 1))
+    return jax.vmap(one)(arr, val, pos)
+
+
+def _seq_write(arr, val, pos):
+    """Decode-time write at ``pos``: scalar = one shared position
+    (dynamic_update_slice), (B,) vector = per-row scatter."""
+    if jnp.ndim(pos) == 1:
+        return _row_update(arr, val, pos)
+    return jax.lax.dynamic_update_slice(
+        arr, val, (0, pos) + (0,) * (arr.ndim - 2))
 
 
 def _cache_write(cache, name, val, pos_or_zero, axis_or_full):
@@ -126,6 +150,9 @@ def _cache_write(cache, name, val, pos_or_zero, axis_or_full):
     int8 caches (DESIGN.md §3: DIMA's 8-b storage applied to the cache)
     carry a per-(token, kv-head) scale next to the codes:
       {"k": int8 (B,S,KV,dh), "k_scale": f32 (B,S,KV), ...}
+
+    Decode writes (``axis_or_full == "pos"``) take ``pos_or_zero`` as a
+    shared scalar or a (B,) per-row position vector.
     """
     arr = cache[name]
     if arr.dtype == jnp.int8:
@@ -137,17 +164,15 @@ def _cache_write(cache, name, val, pos_or_zero, axis_or_full):
             sc = jax.lax.dynamic_update_slice_in_dim(
                 cache[f"{name}_scale"], s.astype(jnp.float32), 0, axis=1)
         else:
-            arr = jax.lax.dynamic_update_slice(arr, q, (0, pos_or_zero, 0, 0))
-            sc = jax.lax.dynamic_update_slice(
-                cache[f"{name}_scale"], s.astype(jnp.float32),
-                (0, pos_or_zero, 0))
+            arr = _seq_write(arr, q, pos_or_zero)
+            sc = _seq_write(cache[f"{name}_scale"], s.astype(jnp.float32),
+                            pos_or_zero)
         return {name: arr, f"{name}_scale": sc}
     if axis_or_full == "full":
         arr = jax.lax.dynamic_update_slice_in_dim(
             arr, val.astype(arr.dtype), 0, axis=1)
     else:
-        arr = jax.lax.dynamic_update_slice(
-            arr, val.astype(arr.dtype), (0, pos_or_zero, 0, 0))
+        arr = _seq_write(arr, val.astype(arr.dtype), pos_or_zero)
     return {name: arr}
 
 
@@ -189,8 +214,10 @@ def attn_block(x, p, *, cfg, ctx: ShardCtx, window, cache=None, pos=None,
         new_cache = {**_cache_write(cache, "k", k, 0, "full"),
                      **_cache_write(cache, "v", v, 0, "full")}
         new_cache = {kk: _csc2(vv, ctx) for kk, vv in new_cache.items()}
-    else:        # decode: write position ``pos`` then attend over the cache
-        positions = jnp.full((1,), pos, dtype=jnp.int32)
+    else:        # decode: write position(s) ``pos`` then attend over the cache
+        # scalar -> (1, 1), per-row (B,) -> (B, 1); both broadcast to the
+        # (B, S=1) layout apply_rope expects
+        positions = jnp.reshape(jnp.asarray(pos, jnp.int32), (-1, 1))
         rope_kw = dict(fraction=cfg.rope_fraction, theta=cfg.rope_theta)
         q = apply_rope(q, positions, **rope_kw)
         k = apply_rope(k, positions, **rope_kw)

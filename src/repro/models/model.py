@@ -71,8 +71,11 @@ class LM:
 
     def decode_step(self, params, cache, pos, tokens=None, embeds=None,
                     dima=None):
-        """One token: tokens (B,1) (or embeds (B,1,d)); pos scalar int32 =
-        write index of the new token. Returns (logits (B,V), cache)."""
+        """One token: tokens (B,1) (or embeds (B,1,d)); pos = write index
+        of the new token — a scalar int32 shared by every row (static
+        batching) or a (B,) vector of per-row positions (continuous
+        batching: each slot advances independently; the KV-cache write is
+        a vmapped per-row scatter). Returns (logits (B,V), cache)."""
         logits, new_cache, _ = transformer.apply(
             params, self.cfg, self.ctx, tokens=tokens, embeds=embeds,
             cache=cache, pos=pos, mode="decode",

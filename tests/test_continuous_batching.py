@@ -1,0 +1,252 @@
+"""Continuous batching: per-slot positions, vmapped cache writes, slot
+lifecycle, and scheduler parity with the legacy bucketed path.
+
+The parity tests rely on greedy decode being per-row deterministic:
+attention masks each row to its own cache, so the same request must
+produce the same tokens whether it shares a bucket or a slot table.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import RunConfig, get_arch, reduced
+from repro.inference import Request, ServeEngine
+from repro.models import LM
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(reduced(get_arch("gemma3-1b")), dtype="float32")
+    model = LM(cfg, RunConfig())
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _ragged_requests(cfg, n, seed=0, lo=3, hi=14, max_new=(1, 7)):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        rng.integers(lo, hi)).astype(np.int32),
+                    max_new=int(rng.integers(*max_new)))
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# model layer: the (B,) positions contract
+# ---------------------------------------------------------------------------
+
+def test_vector_pos_decode_matches_scalar(setup):
+    """decode_step with a (B,) positions vector where every row equals
+    the scalar must produce bit-identical logits AND cache (the vmapped
+    per-row scatter is the scalar dynamic_update_slice, per row)."""
+    cfg, model, params = setup
+    B, S = 3, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    cache = model.init_cache(B, 24)
+    lg, cache = model.prefill(params, cache, tokens=toks)
+    nxt = jnp.argmax(lg, -1).astype(jnp.int32)[:, None]
+    lg_s, cache_s = model.decode_step(params, cache,
+                                      jnp.asarray(S, jnp.int32), tokens=nxt)
+    lg_v, cache_v = model.decode_step(params, cache,
+                                      jnp.full((B,), S, jnp.int32), tokens=nxt)
+    assert np.array_equal(np.asarray(lg_s), np.asarray(lg_v))
+    for a, b in zip(jax.tree_util.tree_leaves(cache_s),
+                    jax.tree_util.tree_leaves(cache_v)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_per_slot_positions_vs_sequential_oracle(setup):
+    """Three live slots at *different* positions (ragged prompts across
+    buckets) must each match a sequential single-request greedy run —
+    the bucketed scheduler could never even co-batch these."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (8, 16, 24)]         # bucket=8 -> blens 8/16/24
+    eng = ServeEngine(model, params, bucket=8, max_batch=4, max_len=48,
+                      scheduler="continuous")
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p.copy(), max_new=5))
+    done = {r.rid: r for r in eng.run()}
+    # slots held different positions simultaneously (ragged prompts, one
+    # lockstep step pool): fewer steps than sequential decode would take
+    assert eng.stats["steps"] <= 5
+
+    for i, p in enumerate(prompts):
+        S = len(p)
+        cache = model.init_cache(1, 48)
+        lg, cache = model.prefill(params, cache, tokens=jnp.asarray(p)[None])
+        ref = [int(jnp.argmax(lg, -1)[0])]
+        for t in range(4):
+            lg, cache = model.decode_step(
+                params, cache, jnp.asarray(S + t, jnp.int32),
+                tokens=jnp.asarray([[ref[-1]]], jnp.int32))
+            ref.append(int(jnp.argmax(lg, -1)[0]))
+        assert done[i].out == ref, (i, done[i].out, ref)
+
+
+# ---------------------------------------------------------------------------
+# scheduler parity + slot lifecycle
+# ---------------------------------------------------------------------------
+
+def test_continuous_matches_bucketed_tokens(setup):
+    """Acceptance: token-identical outputs for the same requests under
+    greedy decode, bucketed vs continuous."""
+    cfg, model, params = setup
+    outs = {}
+    for scheduler in ("bucketed", "continuous"):
+        eng = ServeEngine(model, params, bucket=8, max_batch=4, max_len=64,
+                          scheduler=scheduler)
+        for r in _ragged_requests(cfg, 7, seed=3):
+            eng.submit(r)
+        done = eng.run()
+        assert len(done) == 7 and all(r.done for r in done)
+        outs[scheduler] = {r.rid: list(r.out) for r in done}
+    assert outs["bucketed"] == outs["continuous"]
+
+
+def test_slot_reuse_and_ragged_completion(setup):
+    """max_batch=2 with 5 ragged requests: slots MUST be reused; early
+    finishers free their slot for the next queued request mid-flight."""
+    cfg, model, params = setup
+    eng = ServeEngine(model, params, bucket=8, max_batch=2, max_len=64,
+                      scheduler="continuous")
+    reqs = _ragged_requests(cfg, 5, seed=5, max_new=(1, 6))
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 5 and all(r.done for r in done)
+    assert all(len(r.out) == r.max_new for r in done)
+    assert eng.stats["tokens"] == sum(len(r.out) for r in done)
+    assert all(s is None for s in eng._slot_req)      # table fully drained
+    # ragged completion means strictly fewer steps than the longest-chain
+    # sum a 2-slot static scheduler would need, and more than one round
+    assert eng.stats["steps"] >= max(r.max_new for r in reqs) - 1
+
+
+def test_energy_accounting_parity_with_static_path(setup):
+    """Same requests + same backend => same total and per-request energy
+    under either scheduler (both price every token through
+    weights_energy_per_token)."""
+    from repro.quant import DimaNoiseModel, quantize_params
+    cfg, model, _ = setup
+    params = quantize_params(model.init(jax.random.PRNGKey(0)))
+    totals, per_req = {}, {}
+    for scheduler in ("bucketed", "continuous"):
+        eng = ServeEngine(model, params, bucket=8, max_batch=2, max_len=64,
+                          dima=DimaNoiseModel(key=jax.random.PRNGKey(3)),
+                          scheduler=scheduler)
+        for r in _ragged_requests(cfg, 4, seed=9, lo=3, hi=10,
+                                  max_new=(2, 5)):
+            eng.submit(r)
+        done = eng.run()
+        assert eng.stats["energy_pj"] > 0
+        totals[scheduler] = eng.stats["energy_pj"]
+        per_req[scheduler] = {r.rid: r.energy_pj for r in done}
+        np.testing.assert_allclose(
+            eng.stats["energy_pj"],
+            eng.stats["tokens"] * eng._pj_per_token, rtol=1e-9)
+    np.testing.assert_allclose(totals["bucketed"], totals["continuous"],
+                               rtol=1e-9)
+    assert per_req["bucketed"] == pytest.approx(per_req["continuous"])
+
+
+# ---------------------------------------------------------------------------
+# queue / stats edge cases the static path never exercised
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", ["bucketed", "continuous"])
+def test_zero_max_new_request(setup, scheduler):
+    """max_new=0 completes with an empty output and zero priced tokens,
+    without occupying a slot or poisoning bucket-mates."""
+    cfg, model, params = setup
+    eng = ServeEngine(model, params, bucket=8, max_batch=2, max_len=64,
+                      scheduler=scheduler)
+    rng = np.random.default_rng(11)
+    eng.submit(Request(rid=0, prompt=rng.integers(
+        0, cfg.vocab_size, 6).astype(np.int32), max_new=0))
+    eng.submit(Request(rid=1, prompt=rng.integers(
+        0, cfg.vocab_size, 6).astype(np.int32), max_new=3))
+    done = {r.rid: r for r in eng.run()}
+    assert done[0].done and done[0].out == []
+    assert len(done[1].out) == 3
+    assert eng.stats["tokens"] == 3
+
+
+def test_prompt_longer_than_max_len_rejected(setup):
+    """Admission policy: a prompt whose padded length exceeds max_len can
+    never fit the slot cache — rejected at submit, queue untouched.
+    Empty prompts are rejected there too (they would crash padding)."""
+    cfg, model, params = setup
+    eng = ServeEngine(model, params, bucket=8, max_batch=2, max_len=32)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(rid=0, prompt=np.zeros(33, np.int32), max_new=1))
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit(Request(rid=2, prompt=np.zeros(0, np.int32), max_new=1))
+    # padding pushes a 31-token prompt to blen=32 == max_len: admissible
+    eng.submit(Request(rid=1, prompt=np.zeros(31, np.int32), max_new=1))
+    assert eng.stats["requests"] == 1 and len(eng.queue) == 1
+
+
+def test_cache_capacity_truncation_parity(setup):
+    """A request whose max_new overruns the cache is truncated to
+    min(max_new, max_len - blen + 1) by BOTH schedulers — the bucketed
+    path must stop instead of clamping OOB cache writes onto the last
+    row (which silently corrupted attention before PR 3's fix)."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(21)
+    # blen == max_len (prefill-only: 1 token) and blen + max_new - 1 > max_len
+    cases = [(16, 4, 1), (8, 20, 9)]       # (prompt_len, max_new, expect)
+    outs = {}
+    for scheduler in ("bucketed", "continuous"):
+        eng = ServeEngine(model, params, bucket=8, max_batch=2, max_len=16,
+                          scheduler=scheduler)
+        for i, (plen, mn, _) in enumerate(cases):
+            eng.submit(Request(rid=i, prompt=rng.integers(
+                0, cfg.vocab_size, plen).astype(np.int32), max_new=mn))
+        done = {r.rid: r for r in eng.run()}
+        for i, (_, _, expect) in enumerate(cases):
+            assert len(done[i].out) == expect, (scheduler, i, done[i].out)
+        outs[scheduler] = {r: list(done[r].out) for r in done}
+        rng = np.random.default_rng(21)    # same prompts for both drains
+    assert outs["bucketed"] == outs["continuous"]
+
+
+def test_stats_invariants_under_interleaved_admission(setup):
+    """Submit mid-flight (the continuous scheduler's whole point) and
+    check tokens == sum(len(r.out)) holds at every tick."""
+    cfg, model, params = setup
+    eng = ServeEngine(model, params, bucket=8, max_batch=2, max_len=64,
+                      scheduler="continuous")
+    first = _ragged_requests(cfg, 3, seed=13, max_new=(2, 6))
+    late = _ragged_requests(cfg, 3, seed=14, max_new=(1, 5))
+    for r in late:
+        r.rid += 100
+    for r in first:
+        eng.submit(r)
+    done = []
+    ticks = 0
+    while eng.busy:
+        done.extend(eng.step())
+        ticks += 1
+        if ticks == 2:                     # admission while slots are live
+            for r in late:
+                eng.submit(r)
+        assert eng.stats["tokens"] == (
+            sum(len(r.out) for r in done)
+            + sum(len(s.out) for s in eng._slot_req if s is not None)
+            + sum(len(q.out) for q in eng.queue))
+    assert len(done) == 6
+    assert eng.stats["requests"] == 6
+    assert eng.stats["tokens"] == sum(len(r.out) for r in done)
+    assert all(r.done_at >= r.submitted_at for r in done)
+
+
+def test_unknown_scheduler_rejected(setup):
+    cfg, model, params = setup
+    with pytest.raises(ValueError, match="scheduler"):
+        ServeEngine(model, params, scheduler="speculative")

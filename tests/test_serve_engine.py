@@ -1,10 +1,13 @@
-"""Batched serving engine: bucketed admission, correctness vs
-single-request generation, DIMA-quantized path."""
+"""Batched serving engine: bucketed + continuous schedulers, correctness
+vs single-request generation, DIMA-quantized path.  Continuous-specific
+behaviour (slot reuse, per-slot positions, interleaved admission) lives
+in test_continuous_batching.py."""
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import RunConfig, get_arch, reduced
 from repro.inference import Request, ServeEngine
@@ -21,9 +24,11 @@ def _setup(quant=False):
     return cfg, model, params
 
 
-def test_engine_completes_all_requests():
+@pytest.mark.parametrize("scheduler", ["bucketed", "continuous"])
+def test_engine_completes_all_requests(scheduler):
     cfg, model, params = _setup()
-    eng = ServeEngine(model, params, bucket=8, max_batch=4)
+    eng = ServeEngine(model, params, bucket=8, max_batch=4, max_len=64,
+                      scheduler=scheduler)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size,
@@ -36,17 +41,24 @@ def test_engine_completes_all_requests():
     assert len(done) == 7 and all(r.done for r in done)
     assert all(len(r.out) == 5 for r in done)
     assert eng.stats["tokens"] == 35
-    assert eng.stats["batches"] >= 2      # multiple buckets / batch splits
+    if scheduler == "bucketed":
+        assert eng.stats["batches"] >= 2  # multiple buckets / batch splits
+    else:
+        # 4 slots × 5 tokens each round: far fewer lockstep steps than
+        # 35 sequential tokens
+        assert 0 < eng.stats["steps"] <= 12
 
 
-def test_engine_matches_single_request():
+@pytest.mark.parametrize("scheduler", ["bucketed", "continuous"])
+def test_engine_matches_single_request(scheduler):
     """Batch-of-one through the engine == direct greedy generation when
     the prompt already fills the bucket (no pad prefix)."""
     cfg, model, params = _setup()
     rng = np.random.default_rng(1)
     prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
 
-    eng = ServeEngine(model, params, bucket=8, max_batch=1)
+    eng = ServeEngine(model, params, bucket=8, max_batch=1, max_len=32,
+                      scheduler=scheduler)
     r = Request(rid=0, prompt=prompt, max_new=4)
     eng.submit(r)
     eng.run()

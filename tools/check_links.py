@@ -1,0 +1,58 @@
+"""Fail on dead *relative* links in README.md and docs/*.md.
+
+    python tools/check_links.py [files...]
+
+Checks every markdown inline link / image whose target is a relative
+path (external http(s)/mailto links and pure #anchors are skipped) and
+verifies the target exists relative to the containing file.  A
+`path#anchor` target only checks `path` — anchor resolution would need
+per-renderer slug rules.  Exit code 1 lists every dead link; CI's docs
+job runs this so the documented layout can't rot.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+# inline links [text](target) and images ![alt](target); stops at the
+# first ')' or whitespace, which is fine for the repo's plain paths
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def dead_links(md_path: str) -> list[tuple[str, str]]:
+    base = os.path.dirname(os.path.abspath(md_path))
+    text = open(md_path, encoding="utf-8").read()
+    # fenced code blocks contain command examples, not links
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    bad = []
+    for target in LINK_RE.findall(text):
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        if not os.path.exists(os.path.normpath(os.path.join(base, path))):
+            bad.append((md_path, target))
+    return bad
+
+
+def main(argv=None) -> int:
+    files = (argv if argv else
+             ["README.md"] + sorted(glob.glob("docs/*.md")))
+    missing = [f for f in files if not os.path.exists(f)]
+    if missing:
+        print(f"check_links: input files missing: {missing}")
+        return 1
+    bad = [b for f in files for b in dead_links(f)]
+    for src, target in bad:
+        print(f"DEAD LINK  {src}: ({target})")
+    print(f"check_links: {len(files)} files, "
+          f"{'FAIL: ' + str(len(bad)) + ' dead' if bad else 'all links OK'}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
