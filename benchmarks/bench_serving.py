@@ -133,9 +133,14 @@ def compare(smoke=False, seed=0, arch="gemma3-1b", max_batch=8):
         run_trace(scheduler, model, params, trace, max_batch=max_batch)
         results[scheduler] = run_trace(scheduler, model, params, trace,
                                        max_batch=max_batch)
-    assert (results["bucketed"].pop("outputs")
-            == results["continuous"].pop("outputs")), \
-        "schedulers diverged: greedy decode must be token-identical"
+    # pop BEFORE comparing (never inside an assert: under `python -O` the
+    # side effects would vanish too, leaking per-request outputs into the
+    # artifact and skipping the parity check)
+    out_bucketed = results["bucketed"].pop("outputs")
+    out_continuous = results["continuous"].pop("outputs")
+    if out_bucketed != out_continuous:
+        raise RuntimeError(
+            "schedulers diverged: greedy decode must be token-identical")
     rec = {
         "platform": jax.default_backend(),
         "arch": cfg.name,

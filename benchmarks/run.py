@@ -7,7 +7,10 @@ tables. ``PYTHONPATH=src python -m benchmarks.run``
 rotting): the figure benches that are pure model arithmetic, plus the
 matvec/multibank/crossover sweeps on small matrices — written to
 BENCH_dima_api.smoke.json so toy numbers never overwrite the committed
-full-size artifact.
+full-size artifact.  Every run (smoke included) asserts the fused
+multibank matvec issues exactly ONE compiled-computation launch
+(``dima.count_dispatches``) — a platform-independent guard against the
+per-bank loop silently regressing the shipped path.
 
 BENCH_dima_api.json carries, besides the loop-vs-vectorized matvec
 numbers, the single-bank vs multibank comparison (``multibank``) and the
@@ -85,8 +88,27 @@ def main(argv=None) -> None:
     api["multibank"] = mb
     rows.append(("dima_multibank", mb["multibank_us_per_call"],
                  f"banks={mb['n_banks']};"
+                 f"dispatches={mb['multibank_dispatches']}"
+                 f"vs{mb['multibank_loop_dispatches']};"
+                 f"fused_speedup={mb['fused_speedup_x']}x;"
                  f"pJ={mb['multibank_pj_per_decision']};"
                  f"savings={mb['energy_savings_x']}x"))
+    # perf smoke guard (runs in CI via --smoke, and on full runs too —
+    # it is platform-independent): the fused multibank matvec must issue
+    # exactly ONE compiled-computation launch, and the loop oracle one
+    # per bank, so the per-bank Python loop can never silently creep
+    # back into the shipped path behind a plausible-looking timing
+    if mb["multibank_dispatches"] != 1:
+        raise RuntimeError(
+            f"fused multibank matvec issued {mb['multibank_dispatches']} "
+            f"dispatches, expected 1 — the bank axis is no longer fused "
+            f"(full record: {mb})")
+    if mb["multibank_loop_dispatches"] != mb["n_banks"]:
+        raise RuntimeError(
+            f"per-bank loop oracle issued "
+            f"{mb['multibank_loop_dispatches']} dispatches, expected "
+            f"n_banks={mb['n_banks']} — the dispatch counter or the "
+            f"oracle changed meaning (full record: {mb})")
 
     cross = bench_dima.bench_auto_crossover(
         row_counts=(32, 128) if args.smoke else (16, 32, 64, 128, 256, 512))

@@ -181,6 +181,24 @@ def dima_matvec(d_mat, p_vec, p: DimaParams, chip=None, key=None,
     return DimaOut(code, volts, n_cycles, m)
 
 
+def dima_matmat(d_mat, p_mat, p: DimaParams, chip=None, key=None,
+                mode="dp", v_range=None):
+    """All stored vectors against a query batch: d_mat (m, n), p_mat
+    (b, n) -> (code (b, m), volts (b, m)).  Query j draws its key from
+    ``jax.random.split(key, b)[j]`` — THE per-query convention every
+    backend follows, defined once here so the reference backend, the
+    fused multibank path, and the mesh (``shard_map``) path cannot
+    drift apart."""
+    f = dima_dot if mode == "dp" else dima_manhattan
+    if key is None:
+        return f(d_mat[None, :, :], p_mat[:, None, :], p, chip, None,
+                 v_range)[:2]
+    return jax.vmap(
+        lambda qj, kj: dima_matvec(d_mat, qj, p, chip, kj, mode,
+                                   v_range)[:2])(
+        p_mat, jax.random.split(key, p_mat.shape[0]))
+
+
 def dima_matvec_loop(d_mat, p_vec, p: DimaParams, chip=None, key=None,
                      mode="dp", v_range=None) -> DimaOut:
     """The seed's per-row Python-loop matvec: one traced dima op per

@@ -32,8 +32,8 @@ Migration from the seed entry points:
 from repro.core.api import (  # noqa: F401
     MODES, BACKENDS, AutoBackend, DigitalBackend, DimaBackend,
     MultiBankBackend, PallasBackend, ReferenceBackend, chunked_dot,
-    get_backend, measured_min_rows, register_backend,
-    weights_energy_per_token,
+    chunked_dot_loop, count_dispatches, get_backend, measured_min_rows,
+    register_backend, weights_energy_per_token,
 )
 from repro.core.calibration import (  # noqa: F401
     Calibration, affine_trim, analog_feats, apply_trim, calibrate,

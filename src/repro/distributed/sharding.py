@@ -37,6 +37,17 @@ _LOGICAL = {
 }
 
 
+def require_banks_axis(mesh: Mesh) -> Mesh:
+    """Validate that ``mesh`` carries the ``banks`` axis the multibank
+    backend's ``shard_map`` paths (matvec AND matmat) partition over —
+    one error message for every caller."""
+    if "banks" not in mesh.axis_names:
+        raise ValueError(
+            f"multibank mesh needs a 'banks' axis; got {mesh.axis_names} "
+            "— build one with repro.distributed.sharding.bank_mesh()")
+    return mesh
+
+
 def bank_mesh(n_banks: int = None, devices=None) -> Mesh:
     """1-D device mesh over a ``banks`` axis for the multibank DIMA
     backend's ``shard_map`` fan-out.

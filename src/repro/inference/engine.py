@@ -18,8 +18,12 @@ Two schedulers (see docs/serving.md for the full design note):
 
 Backend switching is shared by both: ``backend`` accepts any registered
 ``repro.dima`` substrate name (or instance), including ``"multibank"``,
-whose bank-sharded execution and amortized cost model flow through
-decode unchanged.
+whose bank-sharded execution — fused into a single dispatch per
+matvec/matmat since the bank axis became a real vmap/kernel-grid
+dimension — and amortized cost model flow through decode unchanged
+(the engine only ever sees the unified ``(stored, query, *, mode, key,
+v_range) -> DimaOut`` signature, so the fusion needed no engine
+change).
 
 Energy accounting: every generated token is priced through the unified
 ``repro.dima`` backend API (``weights_energy_per_token``) when a DIMA

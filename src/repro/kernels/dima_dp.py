@@ -60,13 +60,15 @@ def _make_kernel(p: DimaParams):
         vlr = jnp.mean(rail_l, axis=2) + cn[:, :, 1]
         v = (16.0 * jnp.mean(vmr, axis=1) + jnp.mean(vlr, axis=1)) / 17.0
 
-        # ADC (8-b single-slope)
+        # ADC (8-b single-slope); reshape to the block shape so the same
+        # body serves the (B, M/BM) and bank-leading (NB, B, M/BM) grids
         vr = vr_ref[...]
         full = float(2 ** p.adc_bits - 1)
         x = (v - vr[0, 0]) / jnp.maximum(vr[0, 1] - vr[0, 0], 1e-9)
         code_ref[...] = jnp.clip(jnp.round(x * full), 0,
-                                 full).astype(jnp.int32).reshape(1, BM)
-        volt_ref[...] = v.reshape(1, BM)
+                                 full).astype(jnp.int32).reshape(
+                                     code_ref.shape)
+        volt_ref[...] = v.reshape(volt_ref.shape)
 
     return kernel
 
@@ -105,6 +107,53 @@ def dima_dp_batch(d, qs, col_gain, cap_eps, mult_gain, mult_off, read_noise,
         out_shape=[
             jax.ShapeDtypeStruct((B, M), jnp.int32),
             jax.ShapeDtypeStruct((B, M), jnp.float32),
+        ],
+        interpret=interpret,
+    )(d, qs, col_gain.reshape(1, 128), cap_eps.reshape(1, 128),
+      mult_gain, mult_off, read_noise, cblp_noise, v_range)
+    return codes, volts
+
+
+@functools.partial(jax.jit, static_argnames=("params", "interpret"))
+def dima_dp_bank_batch(d, qs, col_gain, cap_eps, mult_gain, mult_off,
+                       read_noise, cblp_noise, v_range, *,
+                       params: DimaParams = DimaParams(), interpret=None):
+    """Bank-leading grid: d (NB, M, 256) uint8 — one multibank shard per
+    leading index; qs (B, 256); read_noise (NB, B, M, 2, 128); cblp_noise
+    (NB, B, M, 2, 2); v_range (1, 2).  Returns (codes (NB, B, M) int32,
+    volts (NB, B, M) f32): the whole banked matmat is ONE kernel launch
+    over a (NB, B, M/BM) grid — per-block compute identical to
+    ``dima_dp_batch``, so results are bitwise equal to launching that
+    kernel once per bank with the corresponding noise slices."""
+    NB, M = d.shape[0], d.shape[1]
+    B = qs.shape[0]
+    assert M % BM == 0, M
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    grid = (NB, B, M // BM)
+    codes, volts = pl.pallas_call(
+        _make_kernel(params),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BM, 256), lambda nb, b, i: (nb, i, 0)),
+            pl.BlockSpec((1, 256), lambda nb, b, i: (b, 0)),
+            pl.BlockSpec((1, 128), lambda nb, b, i: (0, 0)),
+            pl.BlockSpec((1, 128), lambda nb, b, i: (0, 0)),
+            pl.BlockSpec((2, 128), lambda nb, b, i: (0, 0)),
+            pl.BlockSpec((2, 128), lambda nb, b, i: (0, 0)),
+            pl.BlockSpec((1, 1, BM, 2, 128),
+                         lambda nb, b, i: (nb, b, i, 0, 0)),
+            pl.BlockSpec((1, 1, BM, 2, 2),
+                         lambda nb, b, i: (nb, b, i, 0, 0)),
+            pl.BlockSpec((1, 2), lambda nb, b, i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, BM), lambda nb, b, i: (nb, b, i)),
+            pl.BlockSpec((1, 1, BM), lambda nb, b, i: (nb, b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((NB, B, M), jnp.int32),
+            jax.ShapeDtypeStruct((NB, B, M), jnp.float32),
         ],
         interpret=interpret,
     )(d, qs, col_gain.reshape(1, 128), cap_eps.reshape(1, 128),

@@ -53,12 +53,15 @@ def _make_kernel(p: DimaParams):
         v = jnp.mean(v_abs, axis=2) + cn_ref[...].reshape(BM, 2)
         v = jnp.mean(v, axis=1)
 
+        # reshape to the block shape so the same body serves the
+        # (B, M/BM) and bank-leading (NB, B, M/BM) grids
         vr = vr_ref[...]
         full = float(2 ** p.adc_bits - 1)
         x = (v - vr[0, 0]) / jnp.maximum(vr[0, 1] - vr[0, 0], 1e-9)
         code_ref[...] = jnp.clip(jnp.round(x * full), 0,
-                                 full).astype(jnp.int32).reshape(1, BM)
-        volt_ref[...] = v.reshape(1, BM)
+                                 full).astype(jnp.int32).reshape(
+                                     code_ref.shape)
+        volt_ref[...] = v.reshape(volt_ref.shape)
 
     return kernel
 
@@ -96,6 +99,52 @@ def dima_md_batch(d, qs, col_gain, cap_eps, cmp_noise, read_noise,
         out_shape=[
             jax.ShapeDtypeStruct((B, M), jnp.int32),
             jax.ShapeDtypeStruct((B, M), jnp.float32),
+        ],
+        interpret=interpret,
+    )(d, qs, col_gain.reshape(1, 128), cap_eps.reshape(1, 128),
+      cmp_noise, read_noise, read_noise_b, cblp_noise, v_range)
+    return codes, volts
+
+
+@functools.partial(jax.jit, static_argnames=("params", "interpret"))
+def dima_md_bank_batch(d, qs, col_gain, cap_eps, cmp_noise, read_noise,
+                       read_noise_b, cblp_noise, v_range, *,
+                       params: DimaParams = DimaParams(), interpret=None):
+    """Bank-leading grid: d (NB, M, 256) — one multibank shard per
+    leading index; qs (B, 256); cmp/read noise (NB, B, M, 2, 128); cblp
+    (NB, B, M, 2); v_range (1, 2).  Returns (codes (NB, B, M), volts
+    (NB, B, M)): the banked matmat is ONE kernel launch over a
+    (NB, B, M/BM) grid, per-block compute identical to
+    ``dima_md_batch``."""
+    NB, M = d.shape[0], d.shape[1]
+    B = qs.shape[0]
+    assert M % BM == 0, M
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    codes, volts = pl.pallas_call(
+        _make_kernel(params),
+        grid=(NB, B, M // BM),
+        in_specs=[
+            pl.BlockSpec((1, BM, 256), lambda nb, b, i: (nb, i, 0)),
+            pl.BlockSpec((1, 256), lambda nb, b, i: (b, 0)),
+            pl.BlockSpec((1, 128), lambda nb, b, i: (0, 0)),
+            pl.BlockSpec((1, 128), lambda nb, b, i: (0, 0)),
+            pl.BlockSpec((1, 1, BM, 2, 128),
+                         lambda nb, b, i: (nb, b, i, 0, 0)),
+            pl.BlockSpec((1, 1, BM, 2, 128),
+                         lambda nb, b, i: (nb, b, i, 0, 0)),
+            pl.BlockSpec((1, 1, BM, 2, 128),
+                         lambda nb, b, i: (nb, b, i, 0, 0)),
+            pl.BlockSpec((1, 1, BM, 2), lambda nb, b, i: (nb, b, i, 0)),
+            pl.BlockSpec((1, 2), lambda nb, b, i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, BM), lambda nb, b, i: (nb, b, i)),
+            pl.BlockSpec((1, 1, BM), lambda nb, b, i: (nb, b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((NB, B, M), jnp.int32),
+            jax.ShapeDtypeStruct((NB, B, M), jnp.float32),
         ],
         interpret=interpret,
     )(d, qs, col_gain.reshape(1, 128), cap_eps.reshape(1, 128),

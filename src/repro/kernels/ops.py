@@ -7,6 +7,8 @@ natively.  Every op has a jnp oracle in ref.py and an allclose test.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,8 +16,10 @@ import numpy as np
 from repro.core.params import DimaParams
 from repro.kernels import ref as ref_mod
 from repro.kernels.dima_dp import dima_dp as _dima_dp_kernel
+from repro.kernels.dima_dp import dima_dp_bank_batch as _dima_dp_bank_kernel
 from repro.kernels.dima_dp import dima_dp_batch as _dima_dp_batch_kernel
 from repro.kernels.dima_md import dima_md as _dima_md_kernel
+from repro.kernels.dima_md import dima_md_bank_batch as _dima_md_bank_kernel
 from repro.kernels.dima_md import dima_md_batch as _dima_md_batch_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.subrange_matmul import subrange_matmul as _subrange_kernel
@@ -164,6 +168,113 @@ def dima_md_matmat(d, qs, p: DimaParams = DimaParams(), chip=None, key=None,
                                          cg, ce, cmp_n, rn, rnb, cn, vr,
                                          params=p, interpret=interpret)
     return codes[:, :M], volts[:, :M]
+
+
+# ---------------------------------------------------------------------------
+# bank-fused wrappers: the multibank backend's full banks as ONE launch
+# ---------------------------------------------------------------------------
+
+def _stack_bank_noise(key, p: DimaParams, NB, Mp, kind, B=None):
+    """Per-bank noise stacks for the bank-leading kernels: bank ``b``
+    draws from ``fold_in(key, b)`` — the multibank key convention — with
+    the per-bank layout of ``_expand_noise`` (matvec, ``B=None``) or
+    ``_batch_noise`` (matmat), so the fused launch is bitwise equal to
+    per-bank ``dima_*_banked`` / ``dima_*_matmat`` launches."""
+    one = ((lambda k: _expand_noise(k, p, Mp, kind)) if B is None
+           else (lambda k: _batch_noise(k, p, B, Mp, kind)))
+    if key is None:
+        return tuple(jnp.zeros((NB,) + a.shape, a.dtype) for a in one(None))
+    from repro.core.pipeline import _fold_each
+    return jax.vmap(one)(_fold_each(key, jnp.arange(NB)))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("params", "interpret", "matvec"))
+def _bank_call_dp(d, qs, cg, ce, mg, mo, key, vr, *,
+                  params: DimaParams, interpret, matvec):
+    NB, Mp = d.shape[0], d.shape[1]
+    if matvec:
+        rn, cn = _stack_bank_noise(key, params, NB, Mp, "dp")
+        rn, cn = rn[:, None], cn[:, None]
+    else:
+        rn, cn = _stack_bank_noise(key, params, NB, Mp, "dp",
+                                   B=qs.shape[0])
+    return _dima_dp_bank_kernel(d, qs, cg, ce, mg, mo, rn, cn, vr,
+                                params=params, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("params", "interpret", "matvec"))
+def _bank_call_md(d, qs, cg, ce, key, vr, *,
+                  params: DimaParams, interpret, matvec):
+    NB, Mp = d.shape[0], d.shape[1]
+    if matvec:
+        cmp_n, rn, rnb, cn = _stack_bank_noise(key, params, NB, Mp, "md")
+        cmp_n, rn, rnb, cn = (cmp_n[:, None], rn[:, None], rnb[:, None],
+                              cn[:, None])
+    else:
+        cmp_n, rn, rnb, cn = _stack_bank_noise(key, params, NB, Mp, "md",
+                                               B=qs.shape[0])
+    return _dima_md_bank_kernel(d, qs, cg, ce, cmp_n, rn, rnb, cn, vr,
+                                params=params, interpret=interpret)
+
+
+def _bank_fused(d, q_or_qs, p, chip, key, v_range, interpret, mode, matvec):
+    """Shared driver: pad each bank's rows to the 128-row block, build
+    the per-bank noise stacks, launch the (NB, B, M/128) kernel once,
+    trim the padding.  Noise generation + launch run inside one jit, so
+    a fused banked op is a single dispatched computation."""
+    NB, M = d.shape[0], d.shape[1]
+    dp_ = _pad_to(jnp.asarray(d, jnp.uint8), 128, 1)
+    cg, ce, mg, mo = _chip_arrays(chip, p)
+    if v_range is None:
+        from repro.core.pipeline import dp_gain, md_gain
+        v_range = ((0.0, 255.0 * 255.0 * dp_gain(p)) if mode == "dp"
+                   else (0.0, 255.0 * md_gain(p)))
+    vr = jnp.asarray([v_range], jnp.float32)
+    qs = jnp.asarray(q_or_qs, jnp.uint8)
+    qs2 = qs.reshape(1, -1) if matvec else qs
+    if mode == "dp":
+        codes, volts = _bank_call_dp(dp_, qs2, cg, ce, mg, mo, key, vr,
+                                     params=p, interpret=interpret,
+                                     matvec=matvec)
+    else:
+        codes, volts = _bank_call_md(dp_, qs2, cg, ce, key, vr,
+                                     params=p, interpret=interpret,
+                                     matvec=matvec)
+    if matvec:
+        return codes[:, 0, :M], volts[:, 0, :M]      # (NB, M)
+    return codes[:, :, :M], volts[:, :, :M]          # (NB, B, M)
+
+
+def dima_dp_bank_matvec(d, q, p: DimaParams = DimaParams(), chip=None,
+                        key=None, v_range=None, interpret=None):
+    """Banked fused DP matvec: d (NB, M, 256) uint8 — the multibank
+    backend's stacked full banks — vs one query q (256,).  Bank ``b``
+    draws noise from ``fold_in(key, b)`` with the ``dima_dp_banked``
+    layout.  Returns (codes (NB, M), volts (NB, M)) from ONE launch."""
+    return _bank_fused(d, q, p, chip, key, v_range, interpret, "dp", True)
+
+
+def dima_md_bank_matvec(d, q, p: DimaParams = DimaParams(), chip=None,
+                        key=None, v_range=None, interpret=None):
+    """Banked fused MD matvec (see ``dima_dp_bank_matvec``)."""
+    return _bank_fused(d, q, p, chip, key, v_range, interpret, "md", True)
+
+
+def dima_dp_bank_matmat(d, qs, p: DimaParams = DimaParams(), chip=None,
+                        key=None, v_range=None, interpret=None):
+    """Banked fused DP matmat: d (NB, M, 256) vs queries qs (B, 256);
+    bank ``b`` uses the ``dima_dp_matmat`` noise layout seeded with
+    ``fold_in(key, b)``.  Returns (codes (NB, B, M), volts) from ONE
+    (NB, B, M/128)-grid launch."""
+    return _bank_fused(d, qs, p, chip, key, v_range, interpret, "dp", False)
+
+
+def dima_md_bank_matmat(d, qs, p: DimaParams = DimaParams(), chip=None,
+                        key=None, v_range=None, interpret=None):
+    """Banked fused MD matmat (see ``dima_dp_bank_matmat``)."""
+    return _bank_fused(d, qs, p, chip, key, v_range, interpret, "md", False)
 
 
 def flash_attention_gqa(q, k, v, *, interpret=None):

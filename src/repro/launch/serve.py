@@ -43,8 +43,9 @@ def dima_energy_per_token(cfg, p: DimaParams = DimaParams(), backend=None,
     """Modeled DIMA decode energy: every active weight byte is read once
     per token through MR-FR banks.  Routed through the unified backend
     API so the substrate is swappable — ``"multibank"`` amortizes the
-    fixed CTRL energy over its banks, everything else prices single-bank
-    (``"digital"``: the conventional architecture)."""
+    fixed CTRL energy over its banks (and, since the fused bank axis,
+    also *executes* all banks in one dispatch), everything else prices
+    single-bank (``"digital"``: the conventional architecture)."""
     kw = ({"n_banks": n_banks}
           if (backend == "multibank" and n_banks is not None) else {})
     be = dima_api.get_backend(backend or "reference", p, **kw)

@@ -201,6 +201,60 @@ def test_chunked_dot_long_vectors():
         assert np.max(np.abs(dec - exact)) / (2 * FULL["dp"]) < 0.045
 
 
+def test_chunked_dot_fused_matches_loop():
+    """The vectorized chunked_dot (chunks stacked on a leading axis,
+    fold_in(key, chunk) via _fold_each, ONE jitted dispatch) is bitwise
+    identical to the seed's per-chunk loop — ragged last chunk (506 =
+    256 + 250) and a >2-chunk shape (1030) alike, noisy and noise-free,
+    on digital and reference substrates."""
+    # own stream: the shared module rng's draw order depends on which
+    # tests ran first, and this parity must hold for fixed data
+    r = np.random.default_rng(7)
+    w = jnp.asarray(r.integers(0, 256, (506,)))
+    X = jnp.asarray(r.integers(0, 256, (10, 506)))
+    w3 = jnp.asarray(r.integers(0, 256, (1030,)))
+    X3 = jnp.asarray(r.integers(0, 256, (6, 1030)))
+    for name in ("digital", "reference"):
+        be = dima.get_backend(name, P, CHIP if name == "reference" else None)
+        for key in (None, KEY):
+            for s, q in ((w[None, :], X), (w3[None, :], X3)):
+                fused = np.asarray(dima.chunked_dot(be, s, q, key=key))
+                loop = np.asarray(dima.chunked_dot_loop(be, s, q, key=key))
+                np.testing.assert_array_equal(fused, loop)
+    be = dima.get_backend("reference", P)
+    dima.chunked_dot(be, w[None, :], X, key=KEY)            # warm up
+    with dima.count_dispatches() as c:
+        dima.chunked_dot(be, w[None, :], X, key=KEY)
+    assert c.n == 1                  # one dispatch, not one per chunk
+
+
+def test_stable_crossover_rule_tolerates_non_monotonic_timings():
+    """The persisted auto_crossover_rows rule (docs/benchmarks.md): an
+    isolated noisy loss above the threshold doesn't void the
+    measurement; a lucky small-size win can't drag the threshold down;
+    losing at the largest count means no crossover."""
+    from benchmarks.bench_dima import stable_crossover
+    row = lambda m, ref, pal: {"rows": m, "reference_us": ref,
+                               "pallas_us": pal}
+    assert stable_crossover([]) is None        # not measured at all
+    # clean monotonic crossover at 128
+    assert stable_crossover([row(64, 1, 2), row(128, 3, 2),
+                             row(256, 6, 3)]) == 128
+    # isolated loss at 256 no longer voids the 128 threshold
+    assert stable_crossover([row(64, 1, 2), row(128, 3, 2), row(256, 3, 4),
+                             row(512, 9, 4), row(1024, 20, 8)]) == 128
+    # a lucky win at 16 can't drag the threshold below the rule
+    assert stable_crossover([row(16, 3, 2), row(64, 2, 4), row(128, 2, 4),
+                             row(256, 6, 3), row(512, 9, 4)]) == 256
+    # pallas losing at the largest measured count -> MEASURED "never"
+    # (distinct from None so AutoBackend doesn't fall back to 128 and
+    # route large matvecs onto the path the sweep just measured slower)
+    assert stable_crossover([row(64, 2, 1), row(128, 3, 2),
+                             row(256, 3, 4)]) == "never"
+    from repro.core.api import _MIN_ROWS_NEVER
+    assert _MIN_ROWS_NEVER > 10 ** 9
+
+
 def test_applications_run_on_pallas_backend():
     """The apps' backend parameter accepts any registered substrate: the
     broadcast layouts they use decompose onto the banked kernels."""

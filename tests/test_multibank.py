@@ -1,7 +1,9 @@
 """Multi-bank sharded execution layer: digital-merge correctness vs
-per-bank reference runs (bit-for-bit), n_banks=1 parity, ragged row
-counts, amortized cost model, pallas matmat kernel, and the device-mesh
-(shard_map) fan-out."""
+per-bank reference runs (bit-for-bit), fused single-dispatch execution
+vs the per-bank loop oracle (host and pallas inners, dispatch counts),
+n_banks=1 parity, ragged row counts, amortized cost model, pallas
+matmat kernel, and the device-mesh (shard_map) fan-out — matvec and
+matmat."""
 import json
 import os
 import subprocess
@@ -134,6 +136,96 @@ def test_dot_delegates_and_apps_run():
 
 
 # ---------------------------------------------------------------------------
+# fused single-dispatch execution vs the per-bank loop oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["dp", "md"])
+@pytest.mark.parametrize("m,n_banks", [(200, 4),   # even split
+                                       (50, 8),    # ragged last bank
+                                       (200, 1)])  # degenerate single bank
+def test_fused_matches_loop_bitwise(mode, m, n_banks):
+    """The fused path (bank axis vmapped inside one jit dispatch, ragged
+    remainder a second branch of the same computation) IS the per-bank
+    loop: codes AND volts bitwise identical for matvec and matmat, with
+    and without noise, cycle/conversion totals unchanged."""
+    fused = dima.get_backend("multibank", P, CHIP, n_banks=n_banks)
+    loop = dima.get_backend("multibank", P, CHIP, n_banks=n_banks,
+                            fused=False)
+    for key in (None, KEY):
+        a = fused.matvec(D[:m], Q, mode=mode, key=key)
+        b = loop.matvec(D[:m], Q, mode=mode, key=key)
+        np.testing.assert_array_equal(np.asarray(a.code), np.asarray(b.code))
+        np.testing.assert_array_equal(np.asarray(a.volts),
+                                      np.asarray(b.volts))
+        assert (a.n_cycles, a.n_conversions) == (b.n_cycles,
+                                                 b.n_conversions)
+        am = fused.matmat(D[:m], QS, mode=mode, key=key)
+        bm = loop.matmat(D[:m], QS, mode=mode, key=key)
+        assert am.code.shape == (3, m)
+        np.testing.assert_array_equal(np.asarray(am.code),
+                                      np.asarray(bm.code))
+        np.testing.assert_array_equal(np.asarray(am.volts),
+                                      np.asarray(bm.volts))
+        assert (am.n_cycles, am.n_conversions) == (bm.n_cycles,
+                                                   bm.n_conversions)
+
+
+@pytest.mark.parametrize("mode", ["dp", "md"])
+@pytest.mark.parametrize("m,n_banks", [(200, 4), (50, 8)])
+def test_fused_pallas_inner_matches_loop(mode, m, n_banks):
+    """Pallas inner, interpret mode: the fused (n_banks, B, rows/128)
+    bank-grid launch matches the per-bank kernel-launch loop — codes
+    bitwise (full banks AND the separately-launched ragged remainder);
+    volts to 1 ulp (XLA reassociation across the different launch
+    shapes, same envelope as the jitted-reference precedent)."""
+    fused = dima.get_backend("multibank", P, CHIP, inner="pallas",
+                             n_banks=n_banks)
+    loop = dima.get_backend("multibank", P, CHIP, inner="pallas",
+                            n_banks=n_banks, fused=False)
+    for key in (None, KEY):
+        a = fused.matvec(D[:m], Q, mode=mode, key=key)
+        b = loop.matvec(D[:m], Q, mode=mode, key=key)
+        np.testing.assert_array_equal(np.asarray(a.code), np.asarray(b.code))
+        np.testing.assert_allclose(np.asarray(a.volts), np.asarray(b.volts),
+                                   atol=1e-7)
+        am = fused.matmat(D[:m], QS, mode=mode, key=key)
+        bm = loop.matmat(D[:m], QS, mode=mode, key=key)
+        assert am.code.shape == (3, m)
+        np.testing.assert_array_equal(np.asarray(am.code),
+                                      np.asarray(bm.code))
+        np.testing.assert_allclose(np.asarray(am.volts),
+                                   np.asarray(bm.volts), atol=1e-7)
+
+
+def test_fused_dispatch_counts():
+    """The load-bearing perf contract (also guarded by benchmarks/run.py
+    --smoke in CI): a fused multibank matvec/matmat is ONE compiled-
+    computation launch — even with a ragged last bank on the host path,
+    where the remainder is a branch of the same jitted computation — vs
+    one launch per occupied bank on the loop oracle.  The fused Pallas
+    path is one launch per even split and two when ragged (the
+    remainder's noise shapes differ, so it launches separately)."""
+    mb = dima.get_backend("multibank", P, n_banks=8)
+    loop = dima.get_backend("multibank", P, n_banks=8, fused=False)
+    for be, dat, expect in [(mb, D[:160], 1), (mb, D[:50], 1),
+                            (loop, D[:160], 8), (loop, D[:50], 8)]:
+        be.matvec(dat, Q, key=KEY)                       # warm up
+        with dima.count_dispatches() as c:
+            be.matvec(dat, Q, key=KEY)
+        assert c.n == expect, (be.fused, dat.shape, c.n)
+    mb.matmat(D[:160], QS, key=KEY)
+    with dima.count_dispatches() as c:
+        mb.matmat(D[:160], QS, key=KEY)
+    assert c.n == 1
+    pal = dima.get_backend("multibank", P, inner="pallas", n_banks=8)
+    for dat, expect in [(D[:160], 1), (D[:50], 2)]:
+        pal.matvec(dat, Q, key=KEY)
+        with dima.count_dispatches() as c:
+            pal.matvec(dat, Q, key=KEY)
+        assert c.n == expect
+
+
+# ---------------------------------------------------------------------------
 # cost model
 # ---------------------------------------------------------------------------
 
@@ -182,6 +274,26 @@ def test_mesh_path_matches_host_path_single_device():
     np.testing.assert_array_equal(np.asarray(a.code), np.asarray(b.code))
     np.testing.assert_allclose(np.asarray(a.volts), np.asarray(b.volts),
                                atol=1e-7)
+
+
+def test_mesh_matmat_matches_host_path_single_device():
+    """matmat over the mesh (shard_map over the banks axis, one launch)
+    == the host fused path, bitwise on codes — both run the same
+    per-bank core, so the digital merge is identical in row order."""
+    from repro.distributed.sharding import bank_mesh
+    mesh = bank_mesh(8)
+    mb_mesh = dima.get_backend("multibank", P, CHIP, n_banks=8, mesh=mesh)
+    mb_host = dima.get_backend("multibank", P, CHIP, n_banks=8)
+    for key in (None, KEY):
+        a = mb_mesh.matmat(D[:160], QS, key=key)
+        b = mb_host.matmat(D[:160], QS, key=key)
+        assert a.code.shape == (3, 160)
+        np.testing.assert_array_equal(np.asarray(a.code),
+                                      np.asarray(b.code))
+        np.testing.assert_allclose(np.asarray(a.volts), np.asarray(b.volts),
+                                   atol=1e-7)
+        assert (a.n_cycles, a.n_conversions) == (b.n_cycles,
+                                                 b.n_conversions)
 
 
 def test_mesh_path_rejects_ragged():
@@ -239,6 +351,42 @@ def test_mesh_smoke_subprocess_four_devices():
     assert "MESH_OK" in out.stdout
 
 
+@pytest.mark.slow
+def test_mesh_matmat_smoke_subprocess_four_devices():
+    """Real multi-device shard_map matmat: re-launch with 4 forced host
+    devices and assert mesh matmat == host matmat bitwise (the matmat
+    sibling of the matvec subprocess smoke above)."""
+    prog = textwrap.dedent("""
+        import jax, numpy as np, jax.numpy as jnp
+        from repro import dima
+        from repro.distributed.sharding import bank_mesh
+        assert len(jax.devices()) == 4
+        P = dima.DimaParams()
+        rng = np.random.default_rng(0)
+        D = jnp.asarray(rng.integers(0, 256, (256, 256)))
+        QS = jnp.asarray(rng.integers(0, 256, (3, 256)))
+        KEY = jax.random.PRNGKey(9)
+        mesh = bank_mesh(8)
+        assert mesh.shape["banks"] == 4
+        a = dima.get_backend("multibank", P, n_banks=8,
+                             mesh=mesh).matmat(D, QS, key=KEY)
+        b = dima.get_backend("multibank", P,
+                             n_banks=8).matmat(D, QS, key=KEY)
+        assert a.code.shape == (3, 256)
+        np.testing.assert_array_equal(np.asarray(a.code),
+                                      np.asarray(b.code))
+        print("MESH_MATMAT_OK")
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH",
+                                                              ""))
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "MESH_MATMAT_OK" in out.stdout
+
+
 # ---------------------------------------------------------------------------
 # registry / dispatch satellites
 # ---------------------------------------------------------------------------
@@ -278,6 +426,13 @@ def test_auto_min_rows_from_measured_crossover(tmp_path, monkeypatch):
     assert dima.get_backend("auto", P).min_rows == 128
     monkeypatch.setenv("DIMA_BENCH_JSON", str(tmp_path / "missing.json"))
     assert dima.get_backend("auto", P).min_rows == 128
+    # "never" (measured: pallas loses everywhere) is NOT the fallback —
+    # it keeps auto off the pallas path entirely
+    monkeypatch.setenv("DIMA_BENCH_JSON", str(bench))
+    bench.write_text(json.dumps({"auto_crossover_rows": "never"}))
+    never = dima.get_backend("auto", P)
+    assert never.min_rows > 10 ** 9
+    assert type(never.pick(D, Q)).name == "reference"
     # explicit min_rows always wins
     assert dima.get_backend("auto", P, min_rows=7).min_rows == 7
 
