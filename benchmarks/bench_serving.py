@@ -1,21 +1,23 @@
-"""Serving-scheduler benchmark: bucketed static batching vs continuous
-batching under a ragged Poisson arrival trace.
+"""Serving benchmark: continuous batching vs a sequential baseline
+under a ragged Poisson arrival trace.
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--smoke]
 
-Both schedulers drain the *same* request trace (ragged prompt lengths
-across buckets, ragged ``max_new``, Poisson arrivals) through the same
-``ServeEngine``; greedy decode makes the generated tokens identical, so
-the comparison isolates pure scheduling efficiency: the bucketed path
-pays the bucket barrier (a slot that finishes early idles until its
-whole bucket drains, and late arrivals wait for the drain), the
-continuous path re-admits into freed slots every step.
+Both drains use the SAME continuous ``ServeEngine`` — the baseline is
+simply ``max_batch=1`` (one slot: requests decode one after another,
+i.e. serving without batching; the retired ``bucketed`` scheduler's
+sequential oracle).  Greedy decode makes the generated tokens identical,
+so the comparison isolates pure scheduling efficiency: the sequential
+path serializes every request's decode chain, the continuous path
+re-admits into freed slots every step and advances all live slots in one
+lockstep dispatch.
 
 Arrivals are expressed in *logical decode steps* — request *i* becomes
 visible once the engine has executed ``arrival[i]`` decode steps — so
 the interleaving is deterministic and platform-independent; throughput
-and latency are still measured in wall time.  Emits ``BENCH_serving.json``
-(repo root) with the same platform-tagging convention as
+and latency are still measured in wall time (the step-count ratio is
+the platform-independent speedup).  Emits ``BENCH_serving.json`` (repo
+root) with the same platform-tagging convention as
 ``BENCH_dima_api.json``; ``--smoke`` writes the gitignored
 ``BENCH_serving.smoke.json`` side file instead so toy-size numbers never
 overwrite the committed artifact.  ``$DIMA_BENCH_SERVING_JSON``
@@ -38,7 +40,7 @@ def make_trace(seed=0, n_requests=32, vocab=256, *, max_batch=8,
 
     Mean inter-arrival ≈ E[max_new] / max_batch · 0.8 logical steps —
     offered load just under slot capacity, so the continuous scheduler
-    stays busy while the bucketed one queues behind its barrier."""
+    stays busy while the sequential baseline queues."""
     rng = np.random.default_rng(seed)
     prompts = [rng.integers(0, vocab, int(rng.integers(*prompt_lens))
                             ).astype(np.int32) for _ in range(n_requests)]
@@ -49,14 +51,13 @@ def make_trace(seed=0, n_requests=32, vocab=256, *, max_batch=8,
     return prompts, max_new, arrivals
 
 
-def run_trace(scheduler, model, params, trace, *, bucket=8, max_batch=8,
-              max_len=64):
-    """Drain one trace through one scheduler; returns the metrics dict."""
+def run_trace(model, params, trace, *, max_batch=8, bucket=8, max_len=64):
+    """Drain one trace through one slot-table width; returns metrics."""
     from repro.inference import Request, ServeEngine
 
     prompts, max_new, arrivals = trace
     eng = ServeEngine(model, params, bucket=bucket, max_batch=max_batch,
-                      max_len=max_len, scheduler=scheduler)
+                      max_len=max_len)
     reqs = [Request(rid=i, prompt=p.copy(), max_new=int(m))
             for i, (p, m) in enumerate(zip(prompts, max_new))]
     clock = 0.0                       # logical decode steps executed
@@ -70,7 +71,7 @@ def run_trace(scheduler, model, params, trace, *, bucket=8, max_batch=8,
             # the request became logically visible somewhere inside the
             # last blocking engine call (prev_clock, clock]: stamp the
             # interpolated wall time, not "after the call returned" —
-            # otherwise the bucketed path's drain wait (the very thing
+            # otherwise the sequential path's queue wait (the very thing
             # this benchmark measures) would be cut out of its latency
             frac = ((arrivals[i] - prev_clock) / (clock - prev_clock)
                     if clock > prev_clock else 1.0)
@@ -82,37 +83,29 @@ def run_trace(scheduler, model, params, trace, *, bucket=8, max_batch=8,
             clock = float(arrivals[i])        # jump to the next arrival
             continue
         prev_clock, prev_wall = clock, time.time()
-        if scheduler == "continuous":
-            done.extend(eng.step())
-            clock += 1
-        else:
-            out = eng.run_once()
-            done.extend(out)
-            # a bucket occupies the device for prefill + its longest
-            # request's decode chain; late arrivals waited that long
-            clock += max((len(r.out) for r in out), default=1)
+        done.extend(eng.step())
+        clock += 1
     wall = time.perf_counter() - t0
     lat = np.array([r.done_at - r.submitted_at for r in done])
     assert len(done) == len(reqs)
     assert eng.stats["tokens"] == sum(len(r.out) for r in done)
     return {
-        "scheduler": scheduler,
+        "max_batch": max_batch,
         "requests": len(done),
         "tokens": eng.stats["tokens"],
         "wall_s": round(wall, 4),
         "tokens_per_s": round(eng.stats["tokens"] / wall, 2),
         "latency_p50_s": round(float(np.percentile(lat, 50)), 4),
         "latency_p99_s": round(float(np.percentile(lat, 99)), 4),
-        "decode_batches": eng.stats["batches"],
         "decode_steps": eng.stats["steps"],
         "outputs": {r.rid: list(r.out) for r in done},
     }
 
 
 def compare(smoke=False, seed=0, arch="gemma3-1b", max_batch=8):
-    """Run both schedulers (after a warm-up pass that compiles every
-    shape the trace touches), verify token-identical outputs, and return
-    the comparison record."""
+    """Run continuous (max_batch slots) vs sequential (one slot) after a
+    warm-up pass that compiles every shape the trace touches, verify
+    token-identical outputs, and return the comparison record."""
     import jax
     from repro.configs import RunConfig, get_arch, reduced
     from repro.models import LM
@@ -124,34 +117,37 @@ def compare(smoke=False, seed=0, arch="gemma3-1b", max_batch=8):
     trace = make_trace(seed, n, cfg.vocab_size, max_batch=max_batch)
 
     results = {}
-    for scheduler in ("bucketed", "continuous"):
+    for label, mb in (("sequential", 1), ("continuous", max_batch)):
         # warm-up = a full identical drain: greedy decode is deterministic,
         # so this compiles exactly the (B, blen) prefill/decode shapes the
-        # timed run will hit (the bucketed shape set depends on arrival
+        # timed run will hit (the live-slot set depends on arrival
         # interleaving, so a cheaper synthetic warm-up risks missing some
-        # and billing compile time to one scheduler)
-        run_trace(scheduler, model, params, trace, max_batch=max_batch)
-        results[scheduler] = run_trace(scheduler, model, params, trace,
-                                       max_batch=max_batch)
+        # and billing compile time to one configuration)
+        run_trace(model, params, trace, max_batch=mb)
+        results[label] = run_trace(model, params, trace, max_batch=mb)
     # pop BEFORE comparing (never inside an assert: under `python -O` the
     # side effects would vanish too, leaking per-request outputs into the
     # artifact and skipping the parity check)
-    out_bucketed = results["bucketed"].pop("outputs")
-    out_continuous = results["continuous"].pop("outputs")
-    if out_bucketed != out_continuous:
+    out_seq = results["sequential"].pop("outputs")
+    out_cont = results["continuous"].pop("outputs")
+    if out_seq != out_cont:
         raise RuntimeError(
-            "schedulers diverged: greedy decode must be token-identical")
+            "schedulers diverged: greedy decode must be token-identical "
+            "whether a request shares the slot table or runs alone")
     rec = {
         "platform": jax.default_backend(),
         "arch": cfg.name,
         "max_batch": max_batch,
         "trace": {"seed": seed, "n_requests": n,
                   "total_tokens": results["continuous"]["tokens"]},
-        "bucketed": results["bucketed"],
+        "sequential": results["sequential"],
         "continuous": results["continuous"],
         "speedup_tokens_per_s": round(
             results["continuous"]["tokens_per_s"]
-            / results["bucketed"]["tokens_per_s"], 3),
+            / results["sequential"]["tokens_per_s"], 3),
+        "speedup_decode_steps": round(
+            results["sequential"]["decode_steps"]
+            / results["continuous"]["decode_steps"], 3),
     }
     return rec
 
@@ -176,8 +172,9 @@ def main(argv=None):
     rec = compare(smoke=args.smoke, seed=args.seed, max_batch=args.max_batch)
     path = write_json(rec, smoke=args.smoke)
     print(json.dumps(rec, indent=1))
-    print(f"[bench_serving] continuous/bucketed tokens/s speedup: "
-          f"{rec['speedup_tokens_per_s']}x -> {path}")
+    print(f"[bench_serving] continuous/sequential tokens/s speedup: "
+          f"{rec['speedup_tokens_per_s']}x "
+          f"(steps: {rec['speedup_decode_steps']}x) -> {path}")
     return rec
 
 

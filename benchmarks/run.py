@@ -16,8 +16,10 @@ BENCH_dima_api.json carries, besides the loop-vs-vectorized matvec
 numbers, the single-bank vs multibank comparison (``multibank``) and the
 measured reference↔pallas crossover (``auto_crossover_rows``) that
 ``repro.dima.get_backend("auto")`` picks up on the next run.
-BENCH_serving.json (bench_serving.py) carries the bucketed-vs-continuous
-scheduler comparison.  Artifact schemas: docs/benchmarks.md.
+BENCH_serving.json (bench_serving.py) carries the continuous-engine vs
+sequential-oracle comparison, and the ``analog_lm`` key of
+BENCH_dima_api.json (bench_lm_analog.py, merged read-modify-write) the
+end-to-end analog decode row.  Artifact schemas: docs/benchmarks.md.
 """
 from __future__ import annotations
 
@@ -118,12 +120,12 @@ def main(argv=None) -> None:
     rows.append(("dima_auto_crossover", 0,
                  f"min_rows={cross['auto_crossover_rows']}"))
 
-    # scheduler comparison (bucketed vs continuous ServeEngine under a
-    # Poisson trace) — emits its own BENCH_serving(.smoke).json artifact
+    # continuous engine vs the one-slot sequential oracle under a
+    # Poisson trace — emits its own BENCH_serving(.smoke).json artifact
     serving = bench_serving.compare(smoke=args.smoke)
     bench_serving.write_json(serving, smoke=args.smoke)
-    rows.append(("serving_schedulers", 0,
-                 f"continuous/bucketed={serving['speedup_tokens_per_s']}x;"
+    rows.append(("serving_continuous", 0,
+                 f"continuous/sequential={serving['speedup_tokens_per_s']}x;"
                  f"p99={serving['continuous']['latency_p99_s']}s"))
     details["serving"] = serving
 
@@ -132,10 +134,21 @@ def main(argv=None) -> None:
     # AutoBackend reads for its measured crossover); --smoke writes a
     # side file so CI / local smoke passes never overwrite real
     # measurements with toy-size numbers
+    # (merged read-modify-write: bench_lm_analog.py owns the
+    # ``analog_lm`` key of the same file — don't clobber it)
     root = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
     name = "BENCH_dima_api.smoke.json" if args.smoke else "BENCH_dima_api.json"
-    with open(os.path.join(root, name), "w") as f:
-        json.dump(api, f, indent=1)
+    path = os.path.join(root, name)
+    merged = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+    merged.update(api)
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=1)
 
     roof = []
     if not args.smoke:

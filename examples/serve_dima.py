@@ -5,10 +5,10 @@ weights (the runnable companion to docs/serving.md).
 
 Builds a reduced LM, stores its matmul weights in DIMA sub-ranged
 storage with the calibrated analog noise model attached, submits a
-ragged request set, and drains it through both schedulers — continuous
-(slot table, per-slot positions) and the legacy bucketed fallback —
-verifying token-identical outputs and printing the per-token energy
-ledger (amortized multi-bank model) plus the full-size projection.
+ragged request set, and drains it through the continuous engine —
+verifying parity against a sequential (one-slot) drain and printing the
+per-token energy ledger (amortized multi-bank model) plus the full-size
+projection.
 """
 import argparse
 import dataclasses
@@ -41,9 +41,9 @@ work = [(rng.integers(0, cfg.vocab_size, rng.integers(4, 20)
 print(f"arch={cfg.name} (reduced), {len(work)} ragged requests "
       f"(prompts 4-19 toks, max_new 2-9)")
 
-def drain(scheduler, dima=None, backend="reference"):
-    eng = ServeEngine(model, qparams, bucket=8, max_batch=4, max_len=64,
-                      dima=dima, backend=backend, scheduler=scheduler)
+def drain(max_batch, dima=None, backend="reference"):
+    eng = ServeEngine(model, qparams, bucket=8, max_batch=max_batch,
+                      max_len=64, dima=dima, backend=backend)
     for i, (prompt, n) in enumerate(work):
         eng.submit(Request(rid=i, prompt=prompt.copy(), max_new=n))
     t0 = time.time()
@@ -51,22 +51,23 @@ def drain(scheduler, dima=None, backend="reference"):
     dt = time.time() - t0
     assert len(done) == len(work) and all(r.done for r in done)
     assert eng.stats["tokens"] == sum(len(r.out) for r in done)
-    ticks = (eng.stats["steps"] if scheduler == "continuous"
-             else eng.stats["batches"])
-    print(f"  {scheduler:10s}: {eng.stats['tokens']} tokens in {dt:.2f}s "
-          f"incl. compile ({'steps' if scheduler == 'continuous' else 'buckets'}"
-          f"={ticks}), {eng.stats['energy_pj'] / 1e6:.1f} µJ modeled")
+    label = "continuous" if max_batch > 1 else "sequential"
+    print(f"  {label:10s}: {eng.stats['tokens']} tokens in {dt:.2f}s "
+          f"incl. compile (steps={eng.stats['steps']}), "
+          f"{eng.stats['energy_pj'] / 1e6:.1f} µJ modeled")
     return {r.rid: list(r.out) for r in done}, eng.stats
 
 
-# 1) scheduler parity — exact sub-ranged arithmetic is deterministic, so
-#    greedy decode must be token-identical between the slot table and the
-#    bucketed fallback (same guarantee tests/test_continuous_batching.py pins)
-print("\n[1] w8 sub-ranged, exact arithmetic (scheduler parity):")
-outs, _ = drain("continuous")
-outs_b, _ = drain("bucketed")
-assert outs == outs_b, "schedulers must agree under greedy decode"
-print("token-identical across schedulers: OK")
+# 1) slot-table parity — exact sub-ranged arithmetic is deterministic, so
+#    greedy decode must be token-identical whether requests share the
+#    4-slot table or run one at a time (same guarantee
+#    tests/test_continuous_batching.py pins)
+print("\n[1] w8 sub-ranged, exact arithmetic (slot-table parity):")
+outs, cstats = drain(max_batch=4)
+outs_s, sstats = drain(max_batch=1)
+assert outs == outs_s, "batched and sequential drains must agree (greedy)"
+print(f"token-identical across slot-table widths: OK "
+      f"(steps {cstats['steps']} batched vs {sstats['steps']} sequential)")
 r0 = min(outs)
 print(f"sample (rid={r0}): {outs[r0]}")
 
@@ -74,7 +75,7 @@ print(f"sample (rid={r0}): {outs[r0]}")
 #    multi-bank model; noise draws depend on batch shape, so agreement
 #    with the exact run is statistical (Fig. 5's energy-accuracy knob)
 print("\n[2] + calibrated analog noise, multibank pricing (continuous):")
-outs_n, nstats = drain("continuous",
+outs_n, nstats = drain(max_batch=4,
                        dima=DimaNoiseModel(key=jax.random.PRNGKey(2)),
                        backend="multibank")
 agree = float(np.mean([a == b for rid in outs

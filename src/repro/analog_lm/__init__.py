@@ -1,0 +1,21 @@
+"""Analog-LM: whole-model weight-stationary inference on the DIMA
+substrate (ROADMAP item 1).
+
+    planner     — map layer weight matrices onto DIMA banks (sign-split
+                  differential rows, occupancy + conversion counts)
+    calibration — per-layer v_range + affine trim + predistortion LUT,
+                  persisted with the checkpoint (CalibrationStore)
+    interposer  — AnalogRouter: route the models' matmuls through
+                  get_backend(...) with a per-layer key schedule and a
+                  per-layer digital escape hatch
+"""
+from repro.analog_lm.calibration import (CalibrationStore, calibrate_model,
+                                         predistortion_lut)
+from repro.analog_lm.interposer import AnalogRouter
+from repro.analog_lm.planner import (SLOT_IDS, SlotPlan, analog_pj_per_token,
+                                     digital_pj_per_params, plan_model,
+                                     plan_summary)
+
+__all__ = ["AnalogRouter", "CalibrationStore", "SLOT_IDS", "SlotPlan",
+           "analog_pj_per_token", "calibrate_model", "digital_pj_per_params",
+           "plan_model", "plan_summary", "predistortion_lut"]

@@ -1,0 +1,271 @@
+"""Per-layer calibration store for the analog-LM path.
+
+Every interposed matmul slot of every layer gets its own operating
+point, fit once against a sample of that layer's *own* activations
+(captured from one exact digital forward) and persisted with the
+checkpoint:
+
+* ``v_range`` — the programmed ADC window, from an ideal-chip range
+  pass over the slot's calibration conversions
+  (``core.calibration.calibrate``'s range stage, via
+  ``adc.calibrate_range`` with the same 5 % margin).
+* ``coef`` — a least-squares affine trim (``core.calibration.
+  affine_trim``) from the analog features [decoded differential dot,
+  Σ|x_q|] onto the exact integer dot, absorbing the residual systematic
+  transfer error (INL, multiplier compression) the paper's Fig. 4
+  envelopes describe.
+* a query **predistortion LUT** shared by all layers: the BLP's
+  capacitive multiplier realizes pulse code p as p·(1−β·p)
+  (core/blp.py); the LUT picks, for each 8-b query magnitude, the pulse
+  byte whose *realized* value is closest to the target — the digital
+  twin of the pulse-width/trim-cap calibration the paper performs on
+  silicon (core/params.py doc).
+* ``analog`` — the per-layer escape-hatch flags (1 = analog route,
+  0 = exact digital).  Embeddings and final logits never enter the
+  interposer and stay exact unconditionally.
+
+The store is a pure pytree of stacked (n_layers, …) arrays so it rides
+``lax.scan`` as per-layer xs and round-trips through
+``checkpoint.Checkpointer`` untouched.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adc as adc_mod
+from repro.core.calibration import affine_trim
+from repro.core.params import DimaParams
+from repro.models import transformer
+from repro.models.layers import embed, rms_norm
+
+from repro.analog_lm import planner as planner_mod
+
+
+def predistortion_lut(p: DimaParams) -> jnp.ndarray:
+    """(256,) int32: target query magnitude -> predistorted pulse byte.
+
+    m(q) = 16·p_m(1−β·p_m) + p_l(1−β·p_l) is the value the BLP actually
+    multiplies by for pulse byte q = (p_m, p_l); the LUT inverts it on
+    the achievable lattice, normalized to keep full-scale at 255."""
+    q = np.arange(256)
+    pm, plo = q >> 4, q & 0xF
+    beta = p.mult_beta
+    m = 16.0 * pm * (1.0 - beta * pm) + plo * (1.0 - beta * plo)
+    alpha = m[255] / 255.0
+    lut = np.abs(m[None, :] - alpha * np.arange(256)[:, None]).argmin(1)
+    return jnp.asarray(lut, jnp.int32)
+
+
+@dataclass(frozen=True)
+class CalibrationStore:
+    """Stacked per-layer operating points, one entry per slot."""
+    v_range: Dict[str, jnp.ndarray]     # slot -> (L, 2) f32
+    coef: Dict[str, jnp.ndarray]        # slot -> (L, 3) f32
+    analog: jnp.ndarray                 # (L,) f32 — 1=analog, 0=hatch
+    lut: jnp.ndarray                    # (256,) int32 predistortion
+
+    @property
+    def n_layers(self) -> int:
+        return int(self.analog.shape[0])
+
+    def state(self) -> dict:
+        """Checkpoint-ready pytree (pure arrays, stable key layout)."""
+        return {"v_range": dict(self.v_range), "coef": dict(self.coef),
+                "analog": self.analog, "lut": self.lut}
+
+    @classmethod
+    def from_state(cls, st: dict) -> "CalibrationStore":
+        return cls(v_range=dict(st["v_range"]), coef=dict(st["coef"]),
+                   analog=st["analog"], lut=st["lut"])
+
+    def with_analog_layers(self, mask) -> "CalibrationStore":
+        """Escape-hatch control: mask (L,) truthy = analog route."""
+        m = jnp.asarray(mask, jnp.float32).reshape(self.analog.shape)
+        return CalibrationStore(self.v_range, self.coef, m, self.lut)
+
+
+# ---------------------------------------------------------------------------
+# activation capture: one exact digital forward, recording each slot's
+# input per layer (python-unrolled over transformer.uniform_layer — the
+# scanned forward has no per-layer python identity to hook)
+# ---------------------------------------------------------------------------
+
+class _Capture:
+    """matmul interposer that records inputs and computes the exact path."""
+    interposes = True
+
+    def __init__(self):
+        self.layer = 0
+        self.taken: Dict[tuple, np.ndarray] = {}
+
+    def matmul(self, x, w, name=None, expert_axes=None):
+        from repro.quant.subrange import subrange_matmul_jnp
+        if name in planner_mod.SLOT_IDS:
+            self.taken[(self.layer, name)] = np.asarray(
+                x.astype(jnp.float32).reshape(-1, x.shape[-1])
+                if expert_axes != planner_mod.EXPERT_PER_EQ
+                else x.astype(jnp.float32))
+        return subrange_matmul_jnp(x, w, noise=None, expert_axes=expert_axes)
+
+
+def capture_slot_inputs(model, params, tokens) -> Dict[tuple, np.ndarray]:
+    """(layer, slot) -> float32 activation sample, from one exact
+    forward over ``tokens`` (B, S) run eagerly layer by layer.
+
+    The block body mirrors ``transformer.uniform_layer`` (cache-free
+    train form).  MoE expert slots route through the capacity-dispatch
+    einsums at S>1 — which the router never interposes — so their
+    activations are captured from an extra pass through the dense-all
+    form, the exact evaluation the analog decode path executes."""
+    from repro.models import attention as attn_mod
+    from repro.models import moe as moe_mod
+    from repro.models.layers import ffn
+
+    cfg, ctx, dtype = model.cfg, model.ctx, model.dtype
+    if transformer.structure(cfg) != "uniform":
+        raise NotImplementedError("analog_lm calibration supports the "
+                                  "uniform decoder family")
+    x = embed(params["embed"], jnp.asarray(tokens), cfg, ctx, dtype)
+    windows = np.asarray(transformer._window_array(cfg))
+    cap = _Capture()
+    for l in range(cfg.n_layers):
+        lp = jax.tree_util.tree_map(lambda a: a[l], params["layers"])
+        cap.layer = l
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        h, _ = attn_mod.attn_block(
+            h, lp["attn"], cfg=cfg, ctx=ctx, window=jnp.asarray(windows[l]),
+            cache=None, pos=None, dtype=dtype, dima=cap)
+        x = x + h
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        if cfg.n_experts > 0:
+            moe_mod._moe_dense_all(h, lp["moe"], cfg, ctx, dtype, cap)
+            y, _ = moe_mod.moe_ffn(h, lp["moe"], cfg, ctx, dtype, None)
+        else:
+            y = ffn(h, lp["ffn"], ctx, dtype, cap)
+        x = ctx.sc(x + y, "batch", "seq", None)
+    return cap.taken
+
+
+# ---------------------------------------------------------------------------
+# per-slot fit
+# ---------------------------------------------------------------------------
+
+def _quantize_queries(x2, lut):
+    """float rows -> (x_int signed, predistorted x⁺/x⁻ pulse bytes)."""
+    s = np.abs(x2).max(1, keepdims=True) / 255.0 + 1e-12
+    xi = np.clip(np.round(x2 / s), -255, 255).astype(np.int32)
+    lut = np.asarray(lut)
+    return xi, lut[np.maximum(xi, 0)], lut[np.maximum(-xi, 0)]
+
+
+def _slot_conversions(sp, xi, xp, xm, backend, v_range=None, key=None):
+    """Run the differential chain of one layer's slot over query rows.
+
+    Returns (volts list, decoded differential dot) — volts for the
+    range pass (v_range None → ideal substrate), decode otherwise."""
+    stored = np.asarray(sp.stored)
+    ck = stored.shape[-1] // 2
+    be = backend.ideal() if v_range is None else backend
+    dot = 0.0
+    volts = []
+    for c in range(sp.n_chunks):
+        a, b = c * ck, min((c + 1) * ck, sp.k_dim)
+        pad = ck - (b - a)
+        qp = np.pad(xp[:, a:b], ((0, 0), (0, pad)))
+        qm = np.pad(xm[:, a:b], ((0, 0), (0, pad)))
+        q = jnp.asarray(np.concatenate(
+            [np.concatenate([qp, qm], 1), np.concatenate([qm, qp], 1)], 0))
+        kc = None if key is None else jax.random.fold_in(key, c)
+        out = be.matmat(jnp.asarray(stored[:, c]), q, mode="dp", key=kc,
+                        v_range=v_range)
+        if v_range is None:
+            volts.append(np.asarray(out.volts).ravel())
+        else:
+            dec = np.asarray(be.decode(out.code, mode="dp",
+                                       v_range=v_range))
+            n = xi.shape[0]
+            dot = dot + dec[:n] - dec[n:]
+    return volts, dot
+
+
+def _fit_slot(sp_layer, x2, backend, margin):
+    """One (layer, slot): ideal range pass -> zero-noise trim fit (the
+    trim targets the *systematic* transfer error; dynamic noise is
+    headroom the range margin covers)."""
+    lut = predistortion_lut(backend.p)
+    xi, xp, xm = _quantize_queries(x2, lut)
+    volts, _ = _slot_conversions(sp_layer, xi, xp, xm, backend)
+    v_range = adc_mod.calibrate_range(jnp.concatenate(volts), margin=margin)
+    _, dot = _slot_conversions(sp_layer, xi, xp, xm, backend,
+                               v_range=v_range)
+    # exact integer target, rebuilt from the stored row layout itself
+    stored = np.asarray(sp_layer.stored).astype(np.int32)
+    ck = stored.shape[-1] // 2
+    w_diff = stored[..., :ck] - stored[..., ck:]           # (M, C, ck)
+    w_km = np.zeros((sp_layer.k_dim, stored.shape[0]), np.int32)
+    for c in range(sp_layer.n_chunks):
+        a, b = c * ck, min((c + 1) * ck, sp_layer.k_dim)
+        w_km[a:b] = w_diff[:, c, :b - a].T
+    target = xi @ w_km                                     # (Q, M) exact
+    sumabs = np.broadcast_to(
+        np.abs(xi).sum(1, keepdims=True).astype(np.float64), target.shape)
+    feats = np.stack([np.asarray(dot).ravel(), sumabs.ravel()], 1)
+    coef = affine_trim(feats, target.ravel().astype(np.float64))
+    return np.asarray(v_range, np.float32), np.asarray(coef, np.float32)
+
+
+def calibrate_model(model, params, tokens, *, backend, margin: float = 0.05,
+                    n_cal: int = 96, seed: int = 0,
+                    analog_layers=None) -> CalibrationStore:
+    """Build the per-layer store: capture each slot's activations from
+    one exact forward over ``tokens``, then fit v_range + affine trim
+    per (layer, slot) through the zero-noise analog chain (noise is
+    headroom the 5 % range margin already covers; the trim targets the
+    systematic transfer, exactly like ``core.calibration.calibrate``)."""
+    p = backend.p
+    plans = planner_mod.plan_model(params, p)
+    taken = capture_slot_inputs(model, params, tokens)
+    cfg = model.cfg
+    rng = np.random.default_rng(seed)
+
+    v_range = {s: np.zeros((cfg.n_layers, 2), np.float32) for s in plans}
+    coef = {s: np.zeros((cfg.n_layers, 3), np.float32) for s in plans}
+    for (l, name), x2 in sorted(taken.items()):
+        sp = plans.get(name)
+        if sp is None:
+            continue
+        sp_l = _layer_slice(sp, l)
+        x2 = np.asarray(x2, np.float32)
+        if sp.per_expert:                    # (Q, E, ff) -> join experts
+            x2 = x2.reshape(-1, x2.shape[-1])
+        if x2.shape[0] > n_cal:
+            x2 = x2[rng.choice(x2.shape[0], n_cal, replace=False)]
+        vr, cf = _fit_slot(sp_l, x2, backend, margin)
+        v_range[name][l], coef[name][l] = vr, cf
+
+    mask = (np.ones((cfg.n_layers,), np.float32) if analog_layers is None
+            else np.asarray(analog_layers, np.float32))
+    return CalibrationStore(
+        v_range={s: jnp.asarray(v) for s, v in v_range.items()},
+        coef={s: jnp.asarray(c) for s, c in coef.items()},
+        analog=jnp.asarray(mask), lut=predistortion_lut(p))
+
+
+def _layer_slice(sp: planner_mod.SlotPlan, l: int) -> planner_mod.SlotPlan:
+    """The per-layer view of a slot plan (stored rows of layer l,
+    experts flattened onto rows for the fit — one shared v_range/trim
+    per slot per layer, like the matmat's single programmed window)."""
+    stored = sp.stored[l]
+    if sp.per_expert:                        # (E, M, C, 2ck) -> (E·M, ...)
+        stored = stored.reshape(-1, *stored.shape[-2:])
+    return planner_mod.SlotPlan(
+        name=sp.name, slot_id=sp.slot_id, stored=stored, k_dim=sp.k_dim,
+        m_rows=stored.shape[0], n_experts=sp.n_experts,
+        per_expert=False, n_chunks=sp.n_chunks,
+        conversions_per_query=sp.conversions_per_query,
+        n_banks_layer=sp.n_banks_layer)

@@ -1,0 +1,226 @@
+"""Route the LM's matmuls through the DIMA backend chain.
+
+``AnalogRouter`` is handed to ``LM.forward(..., dima=router)`` in place
+of a ``DimaNoiseModel``.  The models' ``matmul`` sites dispatch to it by
+duck type (``interposes``), passing the weight's slot ``name``; the
+router replays the slot's bank-resident rows (planner.py) through
+``backend.matmat`` and applies the layer's calibrated operating point
+(calibration.py).
+
+Execution of one interposed matmul, per contraction chunk:
+
+    x --------------------------- s_x = max|x|/255 ---------------.
+    x_int = round(x/s_x) ∈ [-255, 255]                            |
+    x⁺/x⁻ = lut[|x_int|±]        (predistorted pulse bytes)       |
+    q = [[x⁺|x⁻], [x⁻|x⁺]]      (2Q queries vs [w⁺|w⁻] rows)     |
+    one fused matmat -> ADC codes -> decode -> diff = top − bottom |
+    y_int = c₀·Σ_chunks diff + c₁·Σ|x_int| + c₂   (affine trim)   |
+    y = y_int · s_x · scale_w  <------------------------------.---'
+
+The two differential passes ride ONE ``matmat`` dispatch with a doubled
+query batch, so the whole layer slot is a single fused multi-bank launch
+(PR 4's single-dispatch execution).  Pre-ADC the differential dot is
+*exactly* x_int·(w⁺−w⁻); everything between that identity and the
+digital reference is ADC quantization plus (key on) sampled noise.
+
+Per-layer state (stored rows, v_range, trim, hatch flag, PRNG key) rides
+the transformer's layer scan as extra xs (``per_layer_xs``); the scan
+body calls ``bind`` to specialize the router to its layer slice.  The
+escape hatch is a ``lax.cond`` on the layer's flag whose digital branch
+is literally ``subrange_matmul_jnp`` — bit-identical to the plain
+quantized forward.  Slots without a plan (4-bit records, MoE dispatch
+einsums, the always-on shared expert) never enter the cond.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import api as api_mod
+from repro.core import energy as energy_mod
+from repro.core.params import DimaParams
+from repro.quant.subrange import subrange_matmul_jnp
+
+from repro.analog_lm import planner as planner_mod
+from repro.analog_lm.calibration import CalibrationStore
+
+
+def _slot_weight_count(sp: planner_mod.SlotPlan) -> int:
+    """fp weight elements one layer of this slot keeps on the array."""
+    mult = sp.n_experts if sp.per_expert else 1
+    return sp.k_dim * sp.m_rows * mult
+
+
+class AnalogRouter:
+    """Whole-model weight-stationary routing onto one DIMA backend.
+
+    Parameters
+    ----------
+    cfg, params : the arch config and its *quantized* param tree (the
+        planner maps every 8-b record named in planner.SLOT_IDS).
+    store : CalibrationStore fit for exactly these params
+        (calibration.calibrate_model), or loaded from a checkpoint.
+    backend : str | DimaBackend — the executing substrate
+        (default the fused multi-bank path).
+    noisy : sample dynamic noise (per-layer/slot/chunk key schedule
+        derived from ``key``); False = zero-noise analog chain.
+    """
+
+    interposes = False          # only the layer-bound view interposes
+
+    def __init__(self, cfg, params, store: CalibrationStore, *,
+                 backend="multibank", noisy=False, key=None):
+        self.cfg = cfg
+        self.backend = api_mod.get_backend(backend)
+        self.p = self.backend.p
+        # operating point relative to the nominal swing: a backend built
+        # with a scaled delta_v_lsb must be billed at that swing too
+        self.delta_v_scale = self.p.delta_v_lsb / DimaParams().delta_v_lsb
+        self.plans = planner_mod.plan_model(params, self.p)
+        self.store = store
+        self.lut = store.lut
+        self.noisy = bool(noisy)
+        slots = {}
+        for name, sp in self.plans.items():
+            slots[name] = {"stored": sp.stored,
+                           "v_range": store.v_range[name],
+                           "coef": store.coef[name]}
+        xs = {"slots": slots, "flag": store.analog}
+        if self.noisy:
+            base = key if key is not None else jax.random.PRNGKey(0)
+            xs["key"] = jax.vmap(
+                lambda i: jax.random.fold_in(base, i))(
+                    jnp.arange(cfg.n_layers))
+        self.per_layer_xs = xs
+
+    def bind(self, lstate, pos=None) -> "_BoundRouter":
+        """Specialize to one layer's xs slice (called in the scan body).
+        ``pos`` (the decode position(s), when the forward has one) is
+        folded into the noise key schedule so every decode step draws a
+        FRESH noise realization — reusing one draw across steps would
+        act as a fixed-pattern bias that accumulates in the KV cache."""
+        return _BoundRouter(self, lstate, pos)
+
+    # -- static accounting --------------------------------------------------
+
+    @property
+    def n_banks(self) -> int:
+        return planner_mod.plan_summary(self.plans)["n_banks"]
+
+    def pj_per_token(self, delta_v_scale: float = None) -> float:
+        """Energy of ONE decoded token: the analog conversions the
+        routed layers actually execute (paper's multi-bank accounting)
+        plus the conventional fetch-compute price of every weight that
+        stays digital (embeddings/logits, hatched layers, shared
+        expert, un-planned slots).  Billed at the router's own operating
+        point (``self.delta_v_scale``) unless overridden."""
+        if delta_v_scale is None:
+            delta_v_scale = self.delta_v_scale
+        mask = np.asarray(jax.device_get(self.store.analog))
+        n_analog = float(mask.sum())
+        conv_layer = sum(sp.conversions_per_query
+                         for sp in self.plans.values())
+        n_ops = int(round(conv_layer * n_analog))
+        analog = 0.0
+        if n_ops:
+            analog = energy_mod.dima_decision(
+                self.p, self.p.dims_per_conversion, mode="dp", n_ops=n_ops,
+                multi_bank=True, n_banks=self.n_banks,
+                delta_v_scale=delta_v_scale).energy_pj
+        analog_params = int(round(
+            sum(_slot_weight_count(sp) for sp in self.plans.values())
+            * n_analog))
+        digital_params = max(self.cfg.active_param_count() - analog_params, 0)
+        return analog + planner_mod.digital_pj_per_params(
+            digital_params, self.p)
+
+
+class _BoundRouter:
+    """One layer's view of the router inside the scan body."""
+
+    interposes = True
+
+    def __init__(self, router: AnalogRouter, lstate, pos=None):
+        self.r = router
+        self.ls = lstate
+        self.pos = pos
+
+    def matmul(self, x, w, name=None, expert_axes=None):
+        r = self.r
+        sp = r.plans.get(name) if name is not None else None
+        supported = sp is not None and expert_axes in (
+            None, planner_mod.EXPERT_SHARED_EQ, planner_mod.EXPERT_PER_EQ)
+        if not supported:        # no plan / dispatch einsum: stay exact
+            return subrange_matmul_jnp(x, w, noise=None,
+                                       expert_axes=expert_axes)
+        st = self.ls["slots"][name]
+
+        def digital(xx):
+            return subrange_matmul_jnp(xx, w, noise=None,
+                                       expert_axes=expert_axes)
+
+        def analog(xx):
+            return self._analog(xx, w["scale"], sp, st, expert_axes
+                                ).astype(xx.dtype)
+
+        return jax.lax.cond(self.ls["flag"] > 0.5, analog, digital, x)
+
+    # -- analog execution ---------------------------------------------------
+
+    def _slot_key(self, sp, salt):
+        if not self.r.noisy:
+            return None
+        k = jax.random.fold_in(self.ls["key"], sp.slot_id)
+        if salt:
+            k = jax.random.fold_in(k, salt)
+        if self.pos is not None:      # fresh draw per decode position
+            k = jax.random.fold_in(
+                k, jnp.sum(self.pos).astype(jnp.uint32))
+        return k
+
+    def _analog(self, x, scale, sp, st, eq):
+        if eq == planner_mod.EXPERT_PER_EQ:
+            # x (..., E, ff) against per-expert rows; experts unrolled
+            # (each an independent fused launch on its own key stream)
+            ys = [self._analog_dot(x[..., e, :], st["stored"][e], sp, st,
+                                   salt=256 + e) * scale[e]
+                  for e in range(sp.n_experts)]
+            return jnp.stack(ys, axis=-2)                  # (..., E, N)
+        y = self._analog_dot(x, st["stored"], sp, st, salt=0)
+        if eq == planner_mod.EXPERT_SHARED_EQ:             # rows = E·N
+            y = y.reshape(y.shape[:-1] + scale.shape)      # (..., E, N)
+        return y * scale
+
+    def _analog_dot(self, x, stored, sp, st, salt):
+        """x (..., K) -> trimmed (..., M); the differential chunk chain."""
+        K = sp.k_dim
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, K).astype(jnp.float32)
+        s_x = jnp.max(jnp.abs(x2), axis=1, keepdims=True) / 255.0 + 1e-12
+        xi = jnp.clip(jnp.round(x2 / s_x), -255, 255).astype(jnp.int32)
+        lut = self.r.lut
+        xp = lut[jnp.maximum(xi, 0)].astype(jnp.uint8)
+        xm = lut[jnp.maximum(-xi, 0)].astype(jnp.uint8)
+        ck = stored.shape[-1] // 2
+        Q = x2.shape[0]
+        be = self.r.backend
+        skey = self._slot_key(sp, salt)
+        diff = jnp.zeros((Q, stored.shape[0]), jnp.float32)
+        for c in range(sp.n_chunks):
+            a, b = c * ck, min((c + 1) * ck, K)
+            pad = ck - (b - a)
+            qp = jnp.pad(xp[:, a:b], ((0, 0), (0, pad)))
+            qm = jnp.pad(xm[:, a:b], ((0, 0), (0, pad)))
+            q = jnp.concatenate([jnp.concatenate([qp, qm], 1),
+                                 jnp.concatenate([qm, qp], 1)], 0)
+            kc = None if skey is None else jax.random.fold_in(skey, c)
+            out = be.matmat(stored[:, c], q, mode="dp", key=kc,
+                            v_range=st["v_range"])
+            dec = be.decode(out.code, mode="dp", v_range=st["v_range"])
+            diff = diff + (dec[:Q] - dec[Q:])
+        cf = st["coef"]
+        sumabs = jnp.sum(jnp.abs(xi), axis=1, keepdims=True
+                         ).astype(jnp.float32)
+        y = cf[0] * diff + cf[1] * sumabs + cf[2]
+        return (y * s_x).reshape(lead + (stored.shape[0],))

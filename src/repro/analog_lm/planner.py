@@ -1,0 +1,186 @@
+"""Bank planner: lay a transformer's weight matrices onto DIMA banks
+weight-stationary.
+
+Each interposed matmul slot (attention wq/wk/wv/wo, FFN w_gate/w_up/
+w_down, MoE expert tensors) is mapped to stored bit-cell rows once, at
+plan time; serving only replays word-line pulses against the resident
+rows.  The storage scheme is the differential sign-split the PCM
+inference chips use for signed weights on a unipolar substrate
+(G+/G− pairs, arXiv:2212.02872): the signed 8-b weight w splits into
+two non-negative words
+
+    w = w⁺ − w⁻,   w⁺ = max(w, 0), w⁻ = max(−w, 0)
+
+stored side by side in one row, and every output is the digital
+difference of two ADC conversions (interposer.py).  Unlike offset-binary
+storage — whose 128-offsets dominate the analog dot and burn ~2 bits of
+ADC range on common mode — the differential dot carries only signal, so
+the 8-b ADC resolves at its quantization floor.
+
+The row layout mirrors ``chunked_dot``: the (doubled) contraction axis
+is cut into ≤``dims_per_conversion`` chunks, one ADC conversion each,
+decoded codes summed digitally.  ``banks_for_matrix`` prices the 16 KB
+bank occupancy of every slot; conversion/cycle counts feed the
+pJ/token account in :mod:`repro.analog_lm.interposer`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy as energy_mod
+from repro.core import mapping
+from repro.core.params import DimaParams
+
+# fixed slot enumeration — the per-layer PRNG key schedule folds these
+# ids, so the stream assignment is stable across runs and configs
+SLOT_IDS = {"wq": 0, "wk": 1, "wv": 2, "wo": 3,
+            "w_gate": 4, "w_up": 5, "w_down": 6}
+
+# the only expert einsum forms with a weight-stationary mapping: the
+# decode-path dense-all evaluation (every expert sees every token).  The
+# capacity-dispatch prefill forms permute tokens per expert and fall
+# back to the exact digital path (interposer.py).
+EXPERT_SHARED_EQ = "bsd,edf->bsef"     # queries shared across experts
+EXPERT_PER_EQ = "bsef,efd->bsed"       # per-expert query slices
+
+
+@dataclass(frozen=True)
+class SlotPlan:
+    """One interposed matmul slot, mapped onto stored rows.
+
+    ``stored`` is (L, M, C, 2·ck) uint8 for plain slots — L layers,
+    M output rows, C contraction chunks, each row chunk the
+    [w⁺ chunk | w⁻ chunk] pair — and (L, E, M, C, 2·ck) for the
+    per-expert form (w_down), where each expert's queries differ.
+    """
+    name: str
+    slot_id: int
+    stored: jnp.ndarray
+    k_dim: int                       # true contraction length (pre-split)
+    m_rows: int                      # output rows per stored block
+    n_experts: int                   # 0 = plain matmul slot
+    per_expert: bool                 # w_down form: loop experts
+    n_chunks: int
+    conversions_per_query: int       # ADC conversions for ONE query token
+    n_banks_layer: int               # 16 KB banks resident, per layer
+
+    @property
+    def n_layers(self) -> int:
+        return self.stored.shape[0]
+
+
+def _sign_split_rows(q_ob, ck: int):
+    """(..., K, N) offset-binary uint8 -> (..., N, C, 2·ck) uint8 rows.
+
+    Zero-pads the last chunk: a zero word contributes nothing to either
+    conversion, so padding is exact (the true K is kept on the plan)."""
+    w_int = q_ob.astype(jnp.int32) - 128
+    parts = []
+    for sgn in (1, -1):
+        h = jnp.maximum(sgn * w_int, 0).astype(jnp.uint8)
+        h = jnp.moveaxis(h, -2, -1)                        # (..., N, K)
+        k = h.shape[-1]
+        c = -(-k // ck)
+        h = jnp.pad(h, [(0, 0)] * (h.ndim - 1) + [(0, c * ck - k)])
+        parts.append(h.reshape(h.shape[:-1] + (c, ck)))
+    return jnp.concatenate(parts, axis=-1)                 # (..., N, C, 2ck)
+
+
+def plan_slot(name: str, rec: dict, p: DimaParams) -> Optional[SlotPlan]:
+    """Map one stacked quantized record (leading layer axis) onto rows.
+
+    rec["q"]: (L, K, N) plain or (L, E, K, N) experts (uint8 offset
+    binary, repro.quant.subrange).  Returns None for 4-bit records —
+    the sign-split targets the 8-b storage scheme."""
+    if "q" not in rec:
+        return None
+    q = rec["q"]
+    ck = p.dims_per_conversion // 2          # both halves share one row
+    per_expert = name == "w_down" and q.ndim == 4
+    if q.ndim == 4 and not per_expert:       # experts share queries:
+        L, E, K, N = q.shape                 # stack experts on the rows
+        stored = _sign_split_rows(q, ck).reshape(
+            L, E * N, -(-K // ck), 2 * ck)
+        m_rows, n_experts = E * N, E
+    elif q.ndim == 4:                        # per-expert query slices
+        L, E, K, N = q.shape
+        stored = _sign_split_rows(q, ck)     # (L, E, N, C, 2ck)
+        m_rows, n_experts = N, E
+    else:
+        L, K, N = q.shape
+        stored = _sign_split_rows(q, ck)     # (L, N, C, 2ck)
+        m_rows, n_experts = N, 0
+    n_chunks = -(-K // ck)
+    rows_total = (m_rows * max(n_experts, 1) if per_expert else m_rows)
+    conversions = 2 * n_chunks * rows_total  # two passes per chunk
+    banks = mapping.banks_for_matrix(
+        (rows_total * n_chunks, p.dims_per_conversion), p=p)
+    return SlotPlan(name=name, slot_id=SLOT_IDS[name], stored=stored,
+                    k_dim=K, m_rows=m_rows, n_experts=n_experts,
+                    per_expert=per_expert, n_chunks=n_chunks,
+                    conversions_per_query=conversions,
+                    n_banks_layer=max(banks, 1))
+
+
+def plan_model(params, p: DimaParams) -> Dict[str, SlotPlan]:
+    """Walk a quantized uniform-stack param tree -> slot plans.
+
+    ``params["layers"]`` holds the lax.scan-stacked layer params; the
+    attention record plus either the FFN or the MoE expert record supply
+    the slots.  The MoE shared expert and the dispatch-path einsums stay
+    on the digital path and are not planned."""
+    layers = params["layers"]
+    plans: Dict[str, SlotPlan] = {}
+    groups = [("attn", layers.get("attn", {}))]
+    if "moe" in layers:
+        groups.append(("moe", layers["moe"]))
+    else:
+        groups.append(("ffn", layers.get("ffn", {})))
+    for gname, group in groups:
+        for name in SLOT_IDS:
+            rec = group.get(name)
+            if isinstance(rec, dict):
+                sp = plan_slot(name, rec, p)
+                if sp is not None:
+                    plans[name] = sp
+    return plans
+
+
+def plan_summary(plans: Dict[str, SlotPlan]) -> dict:
+    """Static occupancy/work table (per decoded token, one query)."""
+    n_layers = next(iter(plans.values())).n_layers if plans else 0
+    conv = sum(sp.conversions_per_query * sp.n_layers
+               for sp in plans.values())
+    banks = sum(sp.n_banks_layer * sp.n_layers for sp in plans.values())
+    return {"n_layers": n_layers, "slots": sorted(plans),
+            "conversions_per_token": conv,
+            "cycles_per_token": conv * 2,     # 256 dims = 2 access cycles
+            "n_banks": banks}
+
+
+def analog_pj_per_token(plans: Dict[str, SlotPlan], p: DimaParams,
+                        n_banks: int = None,
+                        delta_v_scale: float = 1.0) -> float:
+    """Energy of the analog ops one decoded token actually executes:
+    every conversion is a 256-dim DP op, fixed CTRL energy amortized
+    over the multi-bank scenario (energy.dima_decision, the paper's
+    † accounting)."""
+    conv = plan_summary(plans)["conversions_per_token"]
+    if conv == 0:
+        return 0.0
+    return energy_mod.dima_decision(
+        p, p.dims_per_conversion, mode="dp", n_ops=conv, multi_bank=True,
+        n_banks=n_banks, delta_v_scale=delta_v_scale).energy_pj
+
+
+def digital_pj_per_params(n_params: int, p: DimaParams) -> float:
+    """Conventional fetch-then-compute price for the weights that stay
+    on the exact path (embeddings, logits, escape-hatched layers)."""
+    if n_params <= 0:
+        return 0.0
+    return energy_mod.conventional_decision(
+        p, n_params, mode="dp", n_ops=1).energy_pj

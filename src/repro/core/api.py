@@ -211,12 +211,13 @@ def get_backend(name: str = "auto", p: DimaParams = None, chip=None,
     """Factory: ``get_backend("digital" | "reference" | "pallas" |
     "multibank" | "auto")``.
 
-    Accepts an already-constructed backend and returns it unchanged, so
-    call sites can take ``backend: str | DimaBackend`` parameters.
-    Raises ``KeyError`` listing the registered names (and the closest
-    match) on a typo.
+    Accepts an already-constructed backend — anything that isn't a name
+    string, e.g. a ``DimaBackend`` or a duck-typed wrapper around one —
+    and returns it unchanged, so call sites can take
+    ``backend: str | DimaBackend`` parameters.  Raises ``KeyError``
+    listing the registered names (and the closest match) on a typo.
     """
-    if isinstance(name, DimaBackend):
+    if not isinstance(name, str):
         return name
     if name not in BACKENDS:
         close = difflib.get_close_matches(str(name), BACKENDS, n=1)

@@ -1,39 +1,34 @@
-"""Batched serving engine: request queue → slot table → prefill →
-per-slot decode, with optional DIMA-quantized weights.
+"""Continuous-batching serving engine: request queue → slot table →
+per-request prefill → lockstep per-slot decode, with optional
+DIMA-quantized weights (docs/serving.md).
 
-Two schedulers (see docs/serving.md for the full design note):
+The engine keeps a fixed slot table of ``max_batch`` rows.  Each slot
+carries its own position; a request is admitted into a free slot the
+moment one frees (no batch barrier), prefilled alone (B=1 cache,
+scattered into its slot row), and every decode step advances all live
+slots in lockstep through ONE jitted ``model.decode_step`` call with a
+(B,) positions vector — the KV-cache write is a vmapped per-row scatter
+(models/attention.py).  The legacy ``bucketed`` static scheduler was
+retired after its one release of fallback (PR 4); its sequential
+single-request oracle lives on in tests/test_continuous_batching.py.
 
-* ``continuous`` (default) — a fixed slot table of ``max_batch`` rows.
-  Each slot carries its own position; a request is admitted into a free
-  slot the moment one frees (no bucket barrier), prefilled alone
-  (B=1 cache, scattered into its slot row), and every decode step
-  advances all live slots in lockstep through ONE jitted
-  ``model.decode_step`` call with a (B,) positions vector — the
-  KV-cache write is a vmapped per-row scatter
-  (``cache.at[row, pos_row]``-style, models/attention.py).
-* ``bucketed`` — the legacy static path: requests grouped by padded
-  prompt length, each bucket decodes to completion sharing one scalar
-  position.  Kept as a fallback for one release and as the oracle the
-  continuous scheduler is tested token-identical against.
-
-Backend switching is shared by both: ``backend`` accepts any registered
-``repro.dima`` substrate name (or instance), including ``"multibank"``,
-whose bank-sharded execution — fused into a single dispatch per
-matvec/matmat since the bank axis became a real vmap/kernel-grid
-dimension — and amortized cost model flow through decode unchanged
-(the engine only ever sees the unified ``(stored, query, *, mode, key,
-v_range) -> DimaOut`` signature, so the fusion needed no engine
-change).
+Sampling: greedy (``temperature=0``, the default) is the bitwise path
+every parity test pins.  ``temperature>0`` samples per slot with a
+``fold_in(fold_in(sample_key, slot), position)`` key — each slot owns a
+deterministic stream indexed by the cache position it fills, so a
+request's tokens don't depend on which other slots are live — with
+optional ``top_k`` truncation.
 
 Energy accounting: every generated token is priced through the unified
-``repro.dima`` backend API (``weights_energy_per_token``) when a DIMA
-noise model is attached — the ``backend`` parameter picks the substrate
-whose cost model applies: the amortized multi-bank model for
-``"multibank"`` (the only substrate that executes bank-sharded), the
-single-bank DIMA model for ``"reference"``/``"pallas"``, and the
-conventional fetch-then-compute architecture for ``"digital"``.  Both
-schedulers charge the same per-token price (per-request totals live on
-``Request.energy_pj``), so the paths stay energy-parity by construction.
+``repro.dima`` backend API.  With a ``DimaNoiseModel`` attached, the
+whole-model weight-read price applies (``weights_energy_per_token``;
+the ``backend`` parameter picks the substrate whose cost model is used
+— amortized multi-bank CTRL for ``"multibank"``, single-bank for
+``"reference"``/``"pallas"``, conventional fetch-then-compute for
+``"digital"``).  With an ``analog_lm.AnalogRouter`` attached, the price
+is the router's own account of the analog conversions each token
+*actually executes* on its planned banks plus the conventional price of
+the weights that stay digital (``AnalogRouter.pj_per_token``).
 """
 from __future__ import annotations
 
@@ -61,15 +56,11 @@ class Request:
 
 
 class ServeEngine:
-    """``scheduler="continuous"`` (default) or ``"bucketed"`` (legacy
-    static batching, one release of fallback)."""
+    """Continuous batching over a ``max_batch``-row slot table."""
 
     def __init__(self, model, params, *, bucket: int = 32, max_batch: int = 8,
                  max_len: int = 512, dima=None, backend="reference",
-                 scheduler: str = "continuous"):
-        if scheduler not in ("continuous", "bucketed"):
-            raise ValueError(f"unknown scheduler {scheduler!r} "
-                             "(choose 'continuous' or 'bucketed')")
+                 temperature: float = 0.0, top_k: int = 0, sample_key=None):
         self.model = model
         self.params = params
         self.bucket = bucket
@@ -77,24 +68,43 @@ class ServeEngine:
         self.max_len = max_len
         self.dima = dima
         self.backend = dima_api.get_backend(backend)
-        self.scheduler = scheduler
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
         self.queue: list[Request] = []
-        # batches = bucketed admissions; steps = continuous decode steps
-        self.stats = {"requests": 0, "tokens": 0, "batches": 0, "steps": 0,
+        self.stats = {"requests": 0, "tokens": 0, "steps": 0,
                       "energy_pj": 0.0}
         self._pj_per_token = 0.0
         self.n_banks = 0
-        if dima is not None:             # DIMA-quantized weights in use
-            self._pj_per_token, self.n_banks = dima_api.weights_energy_per_token(
-                model.cfg.active_param_count(), self.backend)
-        # one jit root for both schedulers: pos is a scalar (bucketed) or
-        # a (B,) per-slot vector (continuous) — distinct avals, so each
-        # scheduler compiles its own specialization of the same function
+        if dima is not None:
+            if hasattr(dima, "pj_per_token"):
+                # analog_lm router: price the analog ops the routed
+                # layers execute + the conventional digital remainder
+                self._pj_per_token = float(dima.pj_per_token())
+                self.n_banks = int(dima.n_banks)
+            else:                    # DIMA-quantized weight reads
+                self._pj_per_token, self.n_banks = (
+                    dima_api.weights_energy_per_token(
+                        model.cfg.active_param_count(), self.backend))
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode_step(p, c, pos, tokens=t,
                                                    dima=dima))
         self._prefill = jax.jit(
             lambda p, c, t: model.prefill(p, c, tokens=t, dima=dima))
+        if self.temperature > 0.0:
+            key = (sample_key if sample_key is not None
+                   else jax.random.PRNGKey(0))
+            temp, tk = self.temperature, self.top_k
+
+            def pick(logits, slots, positions):
+                def one(lg, s, pos):
+                    k = jax.random.fold_in(jax.random.fold_in(key, s), pos)
+                    if tk > 0:
+                        kth = jax.lax.top_k(lg, tk)[0][..., -1]
+                        lg = jnp.where(lg < kth, -jnp.inf, lg)
+                    return jax.random.categorical(k, lg / temp)
+                return jax.vmap(one)(logits, slots, positions)
+
+            self._pick = jax.jit(pick)
         self._slots_ready = False
 
     # -- shared -----------------------------------------------------------
@@ -113,15 +123,6 @@ class ServeEngine:
         self.queue.append(req)
         self.stats["requests"] += 1
 
-    def _capacity_cap(self, blen: int) -> int:
-        """Most tokens a request admitted at padded length ``blen`` can
-        ever emit: the prefill argmax plus one per remaining cache row
-        (token k's KV is written at blen+k-1 on the next step).  Both
-        schedulers truncate on this — the continuous path by slot
-        eviction, the bucketed path explicitly — so outputs stay
-        token-identical even when a request would overrun the cache."""
-        return max(self.max_len - blen + 1, 1)
-
     def _account(self, req: Request, n_tokens: int = 1):
         self.stats["tokens"] += n_tokens
         self.stats["energy_pj"] += n_tokens * self._pj_per_token
@@ -134,13 +135,21 @@ class ServeEngine:
     def _padded_prompt(self, req: Request, blen: int) -> np.ndarray:
         """Right-align the prompt in ``blen`` rows by repeating the first
         token (positions stay 0..blen-1; the extra prefix tokens are the
-        request's own, so no cross-contamination).  Identical between
-        schedulers — the parity tests rely on it."""
+        request's own, so no cross-contamination)."""
         toks = np.zeros((1, blen), np.int32)
         pad = blen - len(req.prompt)
         toks[0, :pad] = req.prompt[0]
         toks[0, pad:] = req.prompt
         return toks
+
+    def _next_tokens(self, logits, slots, positions) -> np.ndarray:
+        """logits (B, V) -> (B,) int32 next tokens.  Greedy argmax unless
+        a sampling temperature is set (then: per-slot key streams)."""
+        if self.temperature <= 0.0:
+            return np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
+        return np.asarray(self._pick(
+            logits.astype(jnp.float32), jnp.asarray(slots, jnp.int32),
+            jnp.asarray(positions, jnp.int32)).astype(jnp.int32))
 
     @property
     def busy(self) -> bool:
@@ -150,10 +159,6 @@ class ServeEngine:
     def run(self):
         """Drain the queue; returns completed requests."""
         done = []
-        if self.scheduler == "bucketed":
-            while self.queue:
-                done.extend(self.run_once())
-            return done
         while self.busy:
             done.extend(self.step())
         return done
@@ -193,7 +198,7 @@ class ServeEngine:
 
     def _admit(self) -> list[Request]:
         """Fill free slots from the queue (FIFO). Prefill is per-request
-        (B=1) and scattered into the slot row; the prefill's argmax is the
+        (B=1) and scattered into the slot row; the prefill's pick is the
         request's first generated token.  Returns requests that complete
         during admission (max_new <= 1 or a cache-filling prompt)."""
         finished = []
@@ -212,7 +217,7 @@ class ServeEngine:
             logits, sub = self._prefill(self.params, sub,
                                         jnp.asarray(self._padded_prompt(r, blen)))
             self._cache = self._insert(self._cache, sub, slot)
-            nxt = int(jnp.argmax(logits, -1)[0])
+            nxt = int(self._next_tokens(logits, [slot], [blen])[0])
             r.out.append(nxt)
             self._account(r)
             if len(r.out) >= r.max_new or blen >= self.max_len:
@@ -240,7 +245,8 @@ class ServeEngine:
             self.params, self._cache,
             jnp.asarray(self._slot_last[:, None]),
             jnp.asarray(self._slot_pos))
-        nxt = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
+        nxt = self._next_tokens(logits, np.arange(self.max_batch),
+                                self._slot_pos + 1)
         self.stats["steps"] += 1
         for i in live:
             r = self._slot_req[i]
@@ -254,49 +260,3 @@ class ServeEngine:
                 self._slot_req[i] = None
                 self._slot_pos[i] = self.max_len - 1   # park
         return finished
-
-    # -- bucketed scheduler (legacy fallback) -----------------------------
-
-    def _take_bucket(self):
-        """Group queued requests by padded prompt length."""
-        if not self.queue:
-            return None, []
-        buckets = {}
-        for r in self.queue:
-            buckets.setdefault(self._blen(r), []).append(r)
-        blen, reqs = max(buckets.items(), key=lambda kv: len(kv[1]))
-        take = reqs[: self.max_batch]
-        for r in take:
-            self.queue.remove(r)
-        return blen, take
-
-    def run_once(self):
-        """Admit one bucket, prefill, decode to completion. Returns the
-        completed requests (empty when the queue is empty)."""
-        blen, reqs = self._take_bucket()
-        if not reqs:
-            return []
-        B = len(reqs)
-        gen = min(max(r.max_new for r in reqs), self._capacity_cap(blen))
-        toks = jnp.asarray(np.concatenate(
-            [self._padded_prompt(r, blen) for r in reqs], axis=0))
-
-        cache = self.model.init_cache(B, min(blen + gen, self.max_len))
-        logits, cache = self._prefill(self.params, cache, toks)
-        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-        for i, r in enumerate(reqs):
-            if len(r.out) < r.max_new:
-                r.out.append(int(nxt[i]))
-                self._account(r)
-        for t in range(gen - 1):
-            logits, cache = self._decode(self.params, cache, nxt[:, None],
-                                         jnp.asarray(blen + t, jnp.int32))
-            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
-            for i, r in enumerate(reqs):
-                if len(r.out) < r.max_new:
-                    r.out.append(int(nxt[i]))
-                    self._account(r)
-        for r in reqs:
-            self._finish(r)
-        self.stats["batches"] += 1
-        return reqs

@@ -4,21 +4,26 @@ weights — the paper's inference technique as a serving feature.
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
         --batch 4 --prompt-len 32 --gen 16 --quant dima --backend multibank
 
-Requests route through ``inference.ServeEngine``; ``--scheduler``
-selects continuous batching (default: per-slot positions, vmapped
-per-row cache writes — docs/serving.md) or the legacy ``bucketed``
-static path (kept as a fallback for one release).  Frontend-embedding
-archs (``external_embed``) stay on the static ``generate()`` path — the
-engine's slot table is token-id based.
+Requests route through ``inference.ServeEngine`` (continuous batching:
+per-slot positions, vmapped per-row cache writes — docs/serving.md; the
+legacy ``bucketed`` static path was retired after its one release of
+fallback).  Frontend-embedding archs (``external_embed``) stay on the
+static ``generate()`` path — the engine's slot table is token-id based.
 
 ``--quant dima`` stores every matmul weight as sub-ranged offset-binary
 uint8 (quant/subrange.py) and (with --dima-noise) injects the calibrated
 analog noise model — the LM-scale version of Fig. 5's energy↔accuracy
-knob.  Reports tokens/s and, for the DIMA path, the modeled pJ/token
+knob.  ``--analog-lm`` goes further: the whole model is planned onto
+DIMA banks, calibrated, and *executed* through the analog chain
+(analog_lm/ — bank planner → calibration store → AnalogRouter), with
+pJ/token accounted from the conversions each token actually runs.
+Reports tokens/s and, for the DIMA paths, the modeled pJ/token
 (core/energy.py + core/mapping.py).  ``--backend multibank`` prices
 tokens through the bank-sharded substrate's amortized CTRL model
 (``--n-banks`` overrides the paper's 32); the other analog backends use
 the single-bank model and ``digital`` the conventional architecture.
+``--temperature``/``--top-k`` switch the engine from greedy to per-slot
+sampling (fold_in(key, slot) streams).
 """
 from __future__ import annotations
 
@@ -89,12 +94,13 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--scheduler", default="continuous",
-                    choices=["continuous", "bucketed"],
-                    help="engine batching policy (bucketed = legacy static "
-                         "path, fallback for one release)")
     ap.add_argument("--quant", default="none", choices=["none", "dima", "dima4"])
     ap.add_argument("--dima-noise", action="store_true")
+    ap.add_argument("--analog-lm", action="store_true",
+                    help="plan + calibrate the model onto DIMA banks and "
+                         "execute the forward through the analog chain "
+                         "(implies --quant dima; --dima-noise samples the "
+                         "conversion noise on the analog path)")
     ap.add_argument("--backend", default="reference",
                     choices=sorted(dima_api.BACKENDS),
                     help="DIMA substrate used for the energy model "
@@ -102,11 +108,19 @@ def main(argv=None):
     ap.add_argument("--n-banks", type=int, default=None,
                     help="bank count for --backend multibank "
                          "(default: the paper's 32-bank scenario)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-slot sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation when --temperature > 0")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.n_banks is not None and args.backend != "multibank":
         ap.error(f"--n-banks only applies to --backend multibank "
                  f"(got --backend {args.backend})")
+    if args.analog_lm and args.quant == "dima4":
+        ap.error("--analog-lm requires 8-bit records (--quant dima)")
+    if args.analog_lm:
+        args.quant = "dima"
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -118,22 +132,43 @@ def main(argv=None):
     dima = None
     if args.quant != "none":
         params = quantize_params(params, bits=4 if args.quant == "dima4" else 8)
-        if args.dima_noise:
-            dima = DimaNoiseModel(key=jax.random.PRNGKey(args.seed + 1))
-        pj, banks = dima_energy_per_token(cfg, DimaParams(), args.backend,
-                                          args.n_banks)
-        if args.backend == "digital":   # bank-less conventional architecture
-            where = f"{cfg.active_param_count():,} weight bytes/token"
-            amort = "conventional fetch-then-compute"
-        elif args.backend == "multibank":
-            nb = args.n_banks or DimaParams().n_banks_multibank
-            where = f"{banks:,} SRAM banks"
-            amort = f"multi-bank ×{nb}, amortized CTRL"
+        if args.analog_lm:
+            if cfg.external_embed:
+                ap.error("--analog-lm needs a token-id arch "
+                         "(external_embed archs bypass the engine)")
+            from repro.analog_lm import AnalogRouter, calibrate_model
+            be = (dima_api.get_backend(args.backend)
+                  if args.n_banks is None else
+                  dima_api.get_backend(args.backend, n_banks=args.n_banks))
+            cal = np.asarray(jax.random.randint(
+                jax.random.PRNGKey(args.seed + 2), (2, args.prompt_len),
+                0, cfg.vocab_size), np.int32)
+            t0 = time.time()
+            store = calibrate_model(model, params, cal, backend=be)
+            dima = AnalogRouter(cfg, params, store, backend=be,
+                                noisy=args.dima_noise,
+                                key=jax.random.PRNGKey(args.seed + 1))
+            print(f"[serve] analog-lm: {dima.n_banks:,} banks, calibrated "
+                  f"{cfg.n_layers} layers in {time.time()-t0:.1f}s, "
+                  f"measured {dima.pj_per_token()/1e6:.2f} µJ/token "
+                  f"({'noisy' if args.dima_noise else 'zero-noise'} chain)")
         else:
-            where = f"{banks:,} SRAM banks"
-            amort = "single-bank"
-        print(f"[serve] DIMA weights: {where}, modeled {pj/1e6:.2f} µJ/token "
-              f"({args.backend} backend, {amort})")
+            if args.dima_noise:
+                dima = DimaNoiseModel(key=jax.random.PRNGKey(args.seed + 1))
+            pj, banks = dima_energy_per_token(cfg, DimaParams(), args.backend,
+                                              args.n_banks)
+            if args.backend == "digital":   # bank-less conventional arch
+                where = f"{cfg.active_param_count():,} weight bytes/token"
+                amort = "conventional fetch-then-compute"
+            elif args.backend == "multibank":
+                nb = args.n_banks or DimaParams().n_banks_multibank
+                where = f"{banks:,} SRAM banks"
+                amort = f"multi-bank ×{nb}, amortized CTRL"
+            else:
+                where = f"{banks:,} SRAM banks"
+                amort = "single-bank"
+            print(f"[serve] DIMA weights: {where}, modeled "
+                  f"{pj/1e6:.2f} µJ/token ({args.backend} backend, {amort})")
 
     toks = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
                               cfg.vocab_size)
@@ -148,7 +183,8 @@ def main(argv=None):
             backend=(dima_api.get_backend(args.backend)
                      if args.n_banks is None else
                      dima_api.get_backend(args.backend, n_banks=args.n_banks)),
-            scheduler=args.scheduler)
+            temperature=args.temperature, top_k=args.top_k,
+            sample_key=jax.random.PRNGKey(args.seed + 3))
         prompts = np.asarray(toks, np.int32)
         for i in range(args.batch):
             eng.submit(Request(rid=i, prompt=prompts[i], max_new=args.gen))
@@ -157,7 +193,7 @@ def main(argv=None):
     dt = time.time() - t0
     n_tok = args.batch * args.gen
     print(f"[serve] generated {out.shape} in {dt:.2f}s "
-          f"({n_tok/dt:.1f} tok/s incl. compile, {args.scheduler} scheduler)")
+          f"({n_tok/dt:.1f} tok/s incl. compile)")
     print("[serve] sample:", np.asarray(out[0][:12]))
     return out
 

@@ -194,9 +194,9 @@ def attn_block(x, p, *, cfg, ctx: ShardCtx, window, cache=None, pos=None,
     B, S, d = x.shape
     H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
 
-    q = matmul(x, p["wq"], dtype, dima).reshape(B, S, H, dh)
-    k = matmul(x, p["wk"], dtype, dima).reshape(B, S, KV, dh)
-    v = matmul(x, p["wv"], dtype, dima).reshape(B, S, KV, dh)
+    q = matmul(x, p["wq"], dtype, dima, name="wq").reshape(B, S, H, dh)
+    k = matmul(x, p["wk"], dtype, dima, name="wk").reshape(B, S, KV, dh)
+    v = matmul(x, p["wv"], dtype, dima, name="wv").reshape(B, S, KV, dh)
 
     if cache is None:
         positions = jnp.arange(S, dtype=jnp.int32)
@@ -228,7 +228,7 @@ def attn_block(x, p, *, cfg, ctx: ShardCtx, window, cache=None, pos=None,
         vc = _cache_read(new_cache, "v", dtype)
         o = decode_attention(q, kc, vc, cfg=cfg, ctx=ctx, pos=pos, window=window)
 
-    y = matmul(o.reshape(B, S, H * dh), p["wo"], dtype, dima)
+    y = matmul(o.reshape(B, S, H * dh), p["wo"], dtype, dima, name="wo")
     return ctx.sc(y, "batch", "seq", None), new_cache
 
 

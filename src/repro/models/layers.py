@@ -26,15 +26,19 @@ def cast(w, dtype):
     return w.astype(dtype)
 
 
-def matmul(x, w, dtype, dima=None):
-    """x @ w with optional DIMA w4a8 sub-ranged path.
+def matmul(x, w, dtype, dima=None, name=None):
+    """x @ w with optional DIMA sub-ranged / analog-routed path.
 
     ``w`` is either a raw array or a quantized record
     {"msb": int8[(..,ff)], "lsb": int8, "scale": f32[ff]} produced by
-    repro.quant.subrange.quantize_weight.  ``dima`` is a DimaNoiseModel or
-    None (exact sub-ranged arithmetic).
+    repro.quant.subrange.quantize_weight.  ``dima`` is a DimaNoiseModel,
+    an analog_lm router (``interposes`` attribute — routes the matmul
+    through the DIMA backend chain, keyed by the weight's slot ``name``),
+    or None (exact sub-ranged arithmetic).
     """
     if isinstance(w, dict):
+        if getattr(dima, "interposes", False):
+            return dima.matmul(x, w, name=name)
         from repro.quant.subrange import subrange_matmul_jnp
 
         return subrange_matmul_jnp(x, w, noise=dima)
@@ -115,8 +119,8 @@ def init_ffn(key, d, ff):
 
 
 def ffn(x, p, ctx: ShardCtx, dtype, dima=None):
-    g = matmul(x, p["w_gate"], dtype, dima)
-    u = matmul(x, p["w_up"], dtype, dima)
+    g = matmul(x, p["w_gate"], dtype, dima, name="w_gate")
+    u = matmul(x, p["w_up"], dtype, dima, name="w_up")
     h = jax.nn.silu(g) * u
     if ctx.variant == "wg_ffn":
         # weight-gathered: tokens stay seq-sharded; GSPMD all-gathers the
@@ -124,5 +128,5 @@ def ffn(x, p, ctx: ShardCtx, dtype, dima=None):
         h = ctx.sc(h, "batch", "seq", None)
     else:
         h = ctx.sc(h, "batch", None, "ff")
-    y = matmul(h, p["w_down"], dtype, dima)
+    y = matmul(h, p["w_down"], dtype, dima, name="w_down")
     return ctx.sc(y, "batch", "seq", None)

@@ -57,7 +57,12 @@ def moe_ffn(x, p, cfg, ctx: ShardCtx, dtype, dima=None):
         y, aux = _moe_dispatch(x, p, cfg, ctx, dtype, dima)
 
     if cfg.shared_expert:
-        y = y + ffn(x, p["shared"], ctx, dtype, dima)
+        # the shared expert reuses the plain-FFN slot names; under an
+        # analog_lm router those name the *expert* bank plans, so it
+        # stays on the exact digital path (it is always-on and thus the
+        # accuracy-critical half of the MoE output)
+        shared_dima = None if getattr(dima, "interposes", False) else dima
+        y = y + ffn(x, p["shared"], ctx, dtype, shared_dima)
     return ctx.sc(y, "batch", "seq", None), aux
 
 
@@ -108,8 +113,10 @@ def _moe_dispatch(x, p, cfg, ctx, dtype, dima):
     return y, aux
 
 
-def _expert_mm(xe, w, dtype, dima, eq="bnecd,edf->bnecf"):
+def _expert_mm(xe, w, dtype, dima, eq="bnecd,edf->bnecf", name=None):
     if isinstance(w, dict):
+        if getattr(dima, "interposes", False):
+            return dima.matmul(xe, w, name=name, expert_axes=eq)
         from repro.quant.subrange import subrange_matmul_jnp
         return subrange_matmul_jnp(xe, w, noise=dima, expert_axes=eq)
     return jnp.einsum(eq, xe, w.astype(dtype))
@@ -127,10 +134,13 @@ def _moe_dense_all(x, p, cfg, ctx, dtype, dima):
         jax.nn.one_hot(top_idx, cfg.n_experts, dtype=jnp.float32)
         * top_w[..., None], axis=-2)                            # (B,S,E)
 
-    h = _expert_mm(x.astype(dtype), p["w_gate"], dtype, dima, "bsd,edf->bsef")
-    u = _expert_mm(x.astype(dtype), p["w_up"], dtype, dima, "bsd,edf->bsef")
+    h = _expert_mm(x.astype(dtype), p["w_gate"], dtype, dima,
+                   "bsd,edf->bsef", name="w_gate")
+    u = _expert_mm(x.astype(dtype), p["w_up"], dtype, dima,
+                   "bsd,edf->bsef", name="w_up")
     h = jax.nn.silu(h) * u
     h = ctx.sc(h, "batch", None, "expert", None)
-    ye = _expert_mm(h, p["w_down"], dtype, dima, "bsef,efd->bsed")
+    ye = _expert_mm(h, p["w_down"], dtype, dima, "bsef,efd->bsed",
+                    name="w_down")
     y = jnp.einsum("bsed,bse->bsd", ye.astype(jnp.float32), wts)
     return y.astype(dtype)

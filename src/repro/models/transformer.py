@@ -154,6 +154,10 @@ def apply(params, cfg: ArchConfig, ctx: ShardCtx, *, tokens=None, embeds=None,
           dtype=jnp.bfloat16, dima=None):
     """Returns (logits_f32, new_cache, aux_loss)."""
     struct = structure(cfg)
+    if getattr(dima, "per_layer_xs", None) is not None and struct != "uniform":
+        raise NotImplementedError(
+            "analog_lm routing targets the uniform decoder family; "
+            f"{cfg.name} has structure {struct!r}")
     if cfg.external_embed:
         assert embeds is not None, f"{cfg.name} takes frontend embeddings"
         x = embeds.astype(dtype)
@@ -177,25 +181,48 @@ def apply(params, cfg: ArchConfig, ctx: ShardCtx, *, tokens=None, embeds=None,
     return logits, new_cache, aux
 
 
+def uniform_layer(x, aux, lp, window, cache_l, *, cfg, ctx, pos, dtype,
+                  dima=None):
+    """One (attn|local)+FFN/MoE block of the uniform family.
+
+    Module-level so the scan body stays a thin per-layer binding wrapper
+    (analog_lm routers rebind their layer state there) and so eager
+    callers (the analog_lm calibration capture) share the same block
+    arithmetic.  Returns (x, aux, new_cache)."""
+    h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+    h, new_c = attn_mod.attn_block(
+        h, lp["attn"], cfg=cfg, ctx=ctx, window=window,
+        cache=cache_l, pos=pos, dtype=dtype, dima=dima)
+    x = x + h
+    h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+    if cfg.n_experts > 0:
+        h, a = moe_mod.moe_ffn(h, lp["moe"], cfg, ctx, dtype, dima)
+        aux = aux + a
+    else:
+        h = ffn(h, lp["ffn"], ctx, dtype, dima)
+    x = ctx.sc(x + h, "batch", "seq", None)
+    return x, aux, new_c
+
+
 def _apply_uniform(params, cfg, ctx, x, cache, pos, mode, remat_policy,
                    dtype, dima):
     windows = _window_array(cfg)
+    # analog_lm routers carry stacked per-layer state (stored rows,
+    # v_range, trim, hatch flags, keys) that rides the scan as extra xs;
+    # bind() specializes the router to the layer slice inside the body.
+    lxs = getattr(dima, "per_layer_xs", None)
 
     def layer(carry, xs):
         x, aux = carry
-        lp, window, cache_l = xs
-        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
-        h, new_c = attn_mod.attn_block(
-            h, lp["attn"], cfg=cfg, ctx=ctx, window=window,
-            cache=cache_l, pos=pos, dtype=dtype, dima=dima)
-        x = x + h
-        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
-        if cfg.n_experts > 0:
-            h, a = moe_mod.moe_ffn(h, lp["moe"], cfg, ctx, dtype, dima)
-            aux = aux + a
+        if lxs is not None:
+            lp, window, cache_l, lstate = xs
+            dima_l = dima.bind(lstate, pos=pos)
         else:
-            h = ffn(h, lp["ffn"], ctx, dtype, dima)
-        x = ctx.sc(x + h, "batch", "seq", None)
+            lp, window, cache_l = xs
+            dima_l = dima
+        x, aux, new_c = uniform_layer(x, aux, lp, window, cache_l, cfg=cfg,
+                                      ctx=ctx, pos=pos, dtype=dtype,
+                                      dima=dima_l)
         return (x, aux), new_c
 
     if mode == "train":
@@ -204,6 +231,8 @@ def _apply_uniform(params, cfg, ctx, x, cache, pos, mode, remat_policy,
             prevent_cse=False)
 
     xs = (params["layers"], windows, cache)
+    if lxs is not None:
+        xs = xs + (lxs,)
     (x, aux), new_cache = jax.lax.scan(layer, (x, jnp.zeros((), jnp.float32)), xs)
     return x, new_cache, aux
 

@@ -1,9 +1,10 @@
 """Continuous batching: per-slot positions, vmapped cache writes, slot
-lifecycle, and scheduler parity with the legacy bucketed path.
+lifecycle, and parity with the sequential single-request oracle (the
+retired ``bucketed`` scheduler's ground truth).
 
 The parity tests rely on greedy decode being per-row deterministic:
 attention masks each row to its own cache, so the same request must
-produce the same tokens whether it shares a bucket or a slot table.
+produce the same tokens whether it shares a slot table or runs alone.
 """
 import dataclasses
 
@@ -62,13 +63,12 @@ def test_vector_pos_decode_matches_scalar(setup):
 def test_per_slot_positions_vs_sequential_oracle(setup):
     """Three live slots at *different* positions (ragged prompts across
     buckets) must each match a sequential single-request greedy run —
-    the bucketed scheduler could never even co-batch these."""
+    a static batch scheduler could never even co-batch these."""
     cfg, model, params = setup
     rng = np.random.default_rng(7)
     prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
                for n in (8, 16, 24)]         # bucket=8 -> blens 8/16/24
-    eng = ServeEngine(model, params, bucket=8, max_batch=4, max_len=48,
-                      scheduler="continuous")
+    eng = ServeEngine(model, params, bucket=8, max_batch=4, max_len=48)
     for i, p in enumerate(prompts):
         eng.submit(Request(rid=i, prompt=p.copy(), max_new=5))
     done = {r.rid: r for r in eng.run()}
@@ -90,31 +90,31 @@ def test_per_slot_positions_vs_sequential_oracle(setup):
 
 
 # ---------------------------------------------------------------------------
-# scheduler parity + slot lifecycle
+# slot-table-width parity + slot lifecycle
 # ---------------------------------------------------------------------------
 
-def test_continuous_matches_bucketed_tokens(setup):
-    """Acceptance: token-identical outputs for the same requests under
-    greedy decode, bucketed vs continuous."""
+def test_continuous_matches_sequential_tokens(setup):
+    """Token-identical outputs for the same requests under greedy
+    decode, whether they share the slot table (max_batch=4) or run one
+    at a time (max_batch=1 — the retired bucketed path's sequential
+    oracle, now just a narrower engine)."""
     cfg, model, params = setup
     outs = {}
-    for scheduler in ("bucketed", "continuous"):
-        eng = ServeEngine(model, params, bucket=8, max_batch=4, max_len=64,
-                          scheduler=scheduler)
+    for mb in (1, 4):
+        eng = ServeEngine(model, params, bucket=8, max_batch=mb, max_len=64)
         for r in _ragged_requests(cfg, 7, seed=3):
             eng.submit(r)
         done = eng.run()
         assert len(done) == 7 and all(r.done for r in done)
-        outs[scheduler] = {r.rid: list(r.out) for r in done}
-    assert outs["bucketed"] == outs["continuous"]
+        outs[mb] = {r.rid: list(r.out) for r in done}
+    assert outs[1] == outs[4]
 
 
 def test_slot_reuse_and_ragged_completion(setup):
     """max_batch=2 with 5 ragged requests: slots MUST be reused; early
     finishers free their slot for the next queued request mid-flight."""
     cfg, model, params = setup
-    eng = ServeEngine(model, params, bucket=8, max_batch=2, max_len=64,
-                      scheduler="continuous")
+    eng = ServeEngine(model, params, bucket=8, max_batch=2, max_len=64)
     reqs = _ragged_requests(cfg, 5, seed=5, max_new=(1, 6))
     for r in reqs:
         eng.submit(r)
@@ -128,44 +128,40 @@ def test_slot_reuse_and_ragged_completion(setup):
     assert eng.stats["steps"] >= max(r.max_new for r in reqs) - 1
 
 
-def test_energy_accounting_parity_with_static_path(setup):
+def test_energy_accounting_invariant_across_widths(setup):
     """Same requests + same backend => same total and per-request energy
-    under either scheduler (both price every token through
-    weights_energy_per_token)."""
+    whatever the slot-table width (every token is priced through
+    weights_energy_per_token, independent of batching)."""
     from repro.quant import DimaNoiseModel, quantize_params
     cfg, model, _ = setup
     params = quantize_params(model.init(jax.random.PRNGKey(0)))
     totals, per_req = {}, {}
-    for scheduler in ("bucketed", "continuous"):
-        eng = ServeEngine(model, params, bucket=8, max_batch=2, max_len=64,
-                          dima=DimaNoiseModel(key=jax.random.PRNGKey(3)),
-                          scheduler=scheduler)
+    for mb in (1, 2):
+        eng = ServeEngine(model, params, bucket=8, max_batch=mb, max_len=64,
+                          dima=DimaNoiseModel(key=jax.random.PRNGKey(3)))
         for r in _ragged_requests(cfg, 4, seed=9, lo=3, hi=10,
                                   max_new=(2, 5)):
             eng.submit(r)
         done = eng.run()
         assert eng.stats["energy_pj"] > 0
-        totals[scheduler] = eng.stats["energy_pj"]
-        per_req[scheduler] = {r.rid: r.energy_pj for r in done}
+        totals[mb] = eng.stats["energy_pj"]
+        per_req[mb] = {r.rid: r.energy_pj for r in done}
         np.testing.assert_allclose(
             eng.stats["energy_pj"],
             eng.stats["tokens"] * eng._pj_per_token, rtol=1e-9)
-    np.testing.assert_allclose(totals["bucketed"], totals["continuous"],
-                               rtol=1e-9)
-    assert per_req["bucketed"] == pytest.approx(per_req["continuous"])
+    np.testing.assert_allclose(totals[1], totals[2], rtol=1e-9)
+    assert per_req[1] == pytest.approx(per_req[2])
 
 
 # ---------------------------------------------------------------------------
 # queue / stats edge cases the static path never exercised
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("scheduler", ["bucketed", "continuous"])
-def test_zero_max_new_request(setup, scheduler):
+def test_zero_max_new_request(setup):
     """max_new=0 completes with an empty output and zero priced tokens,
-    without occupying a slot or poisoning bucket-mates."""
+    without occupying a slot or stalling its neighbours."""
     cfg, model, params = setup
-    eng = ServeEngine(model, params, bucket=8, max_batch=2, max_len=64,
-                      scheduler=scheduler)
+    eng = ServeEngine(model, params, bucket=8, max_batch=2, max_len=64)
     rng = np.random.default_rng(11)
     eng.submit(Request(rid=0, prompt=rng.integers(
         0, cfg.vocab_size, 6).astype(np.int32), max_new=0))
@@ -192,36 +188,29 @@ def test_prompt_longer_than_max_len_rejected(setup):
     assert eng.stats["requests"] == 1 and len(eng.queue) == 1
 
 
-def test_cache_capacity_truncation_parity(setup):
+def test_cache_capacity_truncation(setup):
     """A request whose max_new overruns the cache is truncated to
-    min(max_new, max_len - blen + 1) by BOTH schedulers — the bucketed
-    path must stop instead of clamping OOB cache writes onto the last
-    row (which silently corrupted attention before PR 3's fix)."""
+    min(max_new, max_len - blen + 1) — the engine must stop instead of
+    clamping OOB cache writes onto the last row (which silently
+    corrupted attention before PR 3's fix)."""
     cfg, model, params = setup
     rng = np.random.default_rng(21)
     # blen == max_len (prefill-only: 1 token) and blen + max_new - 1 > max_len
     cases = [(16, 4, 1), (8, 20, 9)]       # (prompt_len, max_new, expect)
-    outs = {}
-    for scheduler in ("bucketed", "continuous"):
-        eng = ServeEngine(model, params, bucket=8, max_batch=2, max_len=16,
-                          scheduler=scheduler)
-        for i, (plen, mn, _) in enumerate(cases):
-            eng.submit(Request(rid=i, prompt=rng.integers(
-                0, cfg.vocab_size, plen).astype(np.int32), max_new=mn))
-        done = {r.rid: r for r in eng.run()}
-        for i, (_, _, expect) in enumerate(cases):
-            assert len(done[i].out) == expect, (scheduler, i, done[i].out)
-        outs[scheduler] = {r: list(done[r].out) for r in done}
-        rng = np.random.default_rng(21)    # same prompts for both drains
-    assert outs["bucketed"] == outs["continuous"]
+    eng = ServeEngine(model, params, bucket=8, max_batch=2, max_len=16)
+    for i, (plen, mn, _) in enumerate(cases):
+        eng.submit(Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, plen).astype(np.int32), max_new=mn))
+    done = {r.rid: r for r in eng.run()}
+    for i, (_, _, expect) in enumerate(cases):
+        assert len(done[i].out) == expect, (i, done[i].out)
 
 
 def test_stats_invariants_under_interleaved_admission(setup):
     """Submit mid-flight (the continuous scheduler's whole point) and
     check tokens == sum(len(r.out)) holds at every tick."""
     cfg, model, params = setup
-    eng = ServeEngine(model, params, bucket=8, max_batch=2, max_len=64,
-                      scheduler="continuous")
+    eng = ServeEngine(model, params, bucket=8, max_batch=2, max_len=64)
     first = _ragged_requests(cfg, 3, seed=13, max_new=(2, 6))
     late = _ragged_requests(cfg, 3, seed=14, max_new=(1, 5))
     for r in late:
@@ -246,7 +235,9 @@ def test_stats_invariants_under_interleaved_admission(setup):
     assert all(r.done_at >= r.submitted_at for r in done)
 
 
-def test_unknown_scheduler_rejected(setup):
+def test_scheduler_kwarg_retired(setup):
+    """The bucketed fallback is gone: the old ``scheduler=`` kwarg must
+    fail loudly, not be silently swallowed."""
     cfg, model, params = setup
-    with pytest.raises(ValueError, match="scheduler"):
-        ServeEngine(model, params, scheduler="speculative")
+    with pytest.raises(TypeError):
+        ServeEngine(model, params, scheduler="bucketed")

@@ -1,7 +1,7 @@
-"""Batched serving engine: bucketed + continuous schedulers, correctness
-vs single-request generation, DIMA-quantized path.  Continuous-specific
-behaviour (slot reuse, per-slot positions, interleaved admission) lives
-in test_continuous_batching.py."""
+"""Batched serving engine: correctness vs single-request generation,
+per-slot sampling, DIMA-quantized path.  Continuous-specific behaviour
+(slot reuse, per-slot positions, interleaved admission) lives in
+test_continuous_batching.py."""
 import dataclasses
 
 import jax
@@ -24,41 +24,37 @@ def _setup(quant=False):
     return cfg, model, params
 
 
-@pytest.mark.parametrize("scheduler", ["bucketed", "continuous"])
-def test_engine_completes_all_requests(scheduler):
-    cfg, model, params = _setup()
-    eng = ServeEngine(model, params, bucket=8, max_batch=4, max_len=64,
-                      scheduler=scheduler)
-    rng = np.random.default_rng(0)
-    reqs = [Request(rid=i,
+def _ragged(cfg, n, seed=0, max_new=5):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size,
                                         rng.integers(3, 14)).astype(np.int32),
-                    max_new=5)
-            for i in range(7)]
-    for r in reqs:
+                    max_new=max_new)
+            for i in range(n)]
+
+
+def test_engine_completes_all_requests():
+    cfg, model, params = _setup()
+    eng = ServeEngine(model, params, bucket=8, max_batch=4, max_len=64)
+    for r in _ragged(cfg, 7, seed=0):
         eng.submit(r)
     done = eng.run()
     assert len(done) == 7 and all(r.done for r in done)
     assert all(len(r.out) == 5 for r in done)
     assert eng.stats["tokens"] == 35
-    if scheduler == "bucketed":
-        assert eng.stats["batches"] >= 2  # multiple buckets / batch splits
-    else:
-        # 4 slots × 5 tokens each round: far fewer lockstep steps than
-        # 35 sequential tokens
-        assert 0 < eng.stats["steps"] <= 12
+    # 4 slots × 5 tokens each round: far fewer lockstep steps than
+    # 35 sequential tokens
+    assert 0 < eng.stats["steps"] <= 12
 
 
-@pytest.mark.parametrize("scheduler", ["bucketed", "continuous"])
-def test_engine_matches_single_request(scheduler):
+def test_engine_matches_single_request():
     """Batch-of-one through the engine == direct greedy generation when
     the prompt already fills the bucket (no pad prefix)."""
     cfg, model, params = _setup()
     rng = np.random.default_rng(1)
     prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
 
-    eng = ServeEngine(model, params, bucket=8, max_batch=1, max_len=32,
-                      scheduler=scheduler)
+    eng = ServeEngine(model, params, bucket=8, max_batch=1, max_len=32)
     r = Request(rid=0, prompt=prompt, max_new=4)
     eng.submit(r)
     eng.run()
@@ -74,6 +70,83 @@ def test_engine_matches_single_request(scheduler):
         ref.append(int(jnp.argmax(lg, -1)[0]))
     assert r.out == ref, (r.out, ref)
 
+
+# ---------------------------------------------------------------------------
+# per-slot sampling
+# ---------------------------------------------------------------------------
+
+def test_greedy_default_is_argmax_bitwise():
+    """temperature=0 (default) must reproduce the plain argmax chain —
+    the path every scheduler-parity test pins."""
+    cfg, model, params = _setup()
+    a = ServeEngine(model, params, bucket=8, max_batch=2, max_len=64)
+    b = ServeEngine(model, params, bucket=8, max_batch=2, max_len=64,
+                    temperature=0.0, top_k=0,
+                    sample_key=jax.random.PRNGKey(99))  # ignored when greedy
+    for eng, seed in ((a, 4), (b, 4)):
+        for r in _ragged(cfg, 4, seed=seed):
+            eng.submit(r)
+    da = {r.rid: r.out for r in a.run()}
+    db = {r.rid: r.out for r in b.run()}
+    assert da == db
+
+
+def test_sampling_reproducible_and_key_sensitive():
+    """Same sample_key => identical tokens (the per-slot fold_in streams
+    are deterministic); a different key changes them."""
+    cfg, model, params = _setup()
+
+    def drain(key):
+        eng = ServeEngine(model, params, bucket=8, max_batch=2, max_len=64,
+                          temperature=0.8, top_k=5,
+                          sample_key=jax.random.PRNGKey(key))
+        for r in _ragged(cfg, 4, seed=6):
+            eng.submit(r)
+        return {r.rid: r.out for r in eng.run()}
+
+    assert drain(7) == drain(7)
+    assert drain(7) != drain(8)
+
+
+def test_sampling_per_slot_independent_of_cohabitants():
+    """fold_in(key, slot) ⊕ position: a request admitted into slot 0
+    draws the same tokens whether or not other slots are live."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(17)
+    prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+
+    def first_request_out(extra):
+        eng = ServeEngine(model, params, bucket=8, max_batch=2, max_len=64,
+                          temperature=0.7, top_k=4,
+                          sample_key=jax.random.PRNGKey(5))
+        eng.submit(Request(rid=0, prompt=prompt.copy(), max_new=4))
+        for i in range(extra):              # cohabitants land in slot 1+
+            eng.submit(Request(rid=1 + i, prompt=prompt.copy(), max_new=2))
+        return {r.rid: r.out for r in eng.run()}[0]
+
+    alone = first_request_out(0)
+    crowded = first_request_out(1)
+    assert alone == crowded
+
+
+def test_sampling_respects_top_k():
+    """top_k=1 sampling degenerates to greedy regardless of temperature."""
+    cfg, model, params = _setup()
+    greedy = ServeEngine(model, params, bucket=8, max_batch=2, max_len=64)
+    k1 = ServeEngine(model, params, bucket=8, max_batch=2, max_len=64,
+                     temperature=1.3, top_k=1,
+                     sample_key=jax.random.PRNGKey(2))
+    for eng in (greedy, k1):
+        for r in _ragged(cfg, 3, seed=8):
+            eng.submit(r)
+    dg = {r.rid: r.out for r in greedy.run()}
+    d1 = {r.rid: r.out for r in k1.run()}
+    assert dg == d1
+
+
+# ---------------------------------------------------------------------------
+# DIMA energy + quantized path
+# ---------------------------------------------------------------------------
 
 def test_engine_dima_energy_accounting():
     """With a DIMA noise model attached, every generated token is priced
