@@ -161,10 +161,11 @@ def analog_decode_bench(arch="gemma3-1b", *, smoke=False, seed=0,
     return rec
 
 
-def write_row(rec, smoke=False):
-    """Merge the record into BENCH_dima_api(.smoke).json under the
-    ``analog_lm`` key — read-modify-write, so the matvec/multibank/
-    crossover tables from benchmarks/run.py survive (and vice versa)."""
+def write_row(rec, smoke=False, key="analog_lm"):
+    """Merge the record into BENCH_dima_api(.smoke).json under ``key``
+    (``analog_lm``; ``analog_lm_moe`` for the MoE arch) — read-modify-
+    write, so the matvec/multibank/crossover tables from
+    benchmarks/run.py survive (and vice versa)."""
     root = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
     name = "BENCH_dima_api.smoke.json" if smoke else "BENCH_dima_api.json"
     path = os.environ.get("DIMA_BENCH_JSON", os.path.join(root, name))
@@ -175,7 +176,7 @@ def write_row(rec, smoke=False):
                 data = json.load(f)
         except (OSError, ValueError):
             data = {}
-    data["analog_lm"] = rec
+    data[key] = rec
     with open(path, "w") as f:
         json.dump(data, f, indent=1)
     return path
@@ -187,12 +188,20 @@ def main(argv=None):
                     help="tiny config (2 layers, 8 tokens/request, "
                          "zero-noise chain) for CI")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--arch", default="gemma3-1b",
+                    help="arch to train/calibrate/decode (reduced); MoE "
+                         "archs route every expert through the analog "
+                         "chain and land under the analog_lm_moe key")
     ap.add_argument("--backend", default="multibank",
                     choices=sorted(api_mod.BACKENDS))
     args = ap.parse_args(argv)
-    rec = analog_decode_bench(smoke=args.smoke, seed=args.seed,
+    rec = analog_decode_bench(args.arch, smoke=args.smoke, seed=args.seed,
                               backend=args.backend)
-    path = write_row(rec, smoke=args.smoke)
+    from repro.configs import get_arch
+    key = ("analog_lm" if args.arch == "gemma3-1b"
+           else "analog_lm_moe" if get_arch(args.arch).n_experts > 1
+           else "analog_lm_" + args.arch.replace("-", "_").replace(".", "_"))
+    path = write_row(rec, smoke=args.smoke, key=key)
     print(json.dumps(rec, indent=1))
     print(f"[bench_lm_analog] {rec['token_match_pct']}% token match, "
           f"{rec['pj_per_token']/1e6:.2f} µJ/token over {rec['n_banks']} "

@@ -120,14 +120,24 @@ def main(argv=None) -> None:
     rows.append(("dima_auto_crossover", 0,
                  f"min_rows={cross['auto_crossover_rows']}"))
 
-    # continuous engine vs the one-slot sequential oracle under a
-    # Poisson trace — emits its own BENCH_serving(.smoke).json artifact
+    # continuous engine vs the one-slot sequential oracle, plus paged vs
+    # dense KV at matched memory, under Poisson traces — merged into the
+    # BENCH_serving(.smoke).json artifact (the fleet section is owned by
+    # full bench_serving runs / repro.launch.replicas, not re-measured
+    # here)
     serving = bench_serving.compare(smoke=args.smoke)
-    bench_serving.write_json(serving, smoke=args.smoke)
+    paged = bench_serving.compare_paged(smoke=args.smoke)
+    bench_serving.write_json({"scheduler": serving, "paged": paged},
+                             smoke=args.smoke)
     rows.append(("serving_continuous", 0,
                  f"continuous/sequential={serving['speedup_tokens_per_s']}x;"
                  f"p99={serving['continuous']['latency_p99_s']}s"))
-    details["serving"] = serving
+    rows.append(("serving_paged", 0,
+                 f"paged/dense={paged['speedup_tokens_per_s']}x@"
+                 f"{paged['matched_memory_rows']}rows;"
+                 f"skips={paged['paged']['prefill_skips']};"
+                 f"cow={paged['paged']['cow_copies']}"))
+    details["serving"] = {"scheduler": serving, "paged": paged}
 
     details["dima_api"] = api
     # full runs refresh the committed repo-root artifact (which

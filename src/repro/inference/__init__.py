@@ -1,1 +1,3 @@
 from repro.inference.engine import Request, ServeEngine  # noqa: F401
+from repro.inference.paged_kv import (  # noqa: F401
+    BlockPool, chain_key, tail_key)

@@ -5,12 +5,27 @@ DIMA-quantized weights (docs/serving.md).
 The engine keeps a fixed slot table of ``max_batch`` rows.  Each slot
 carries its own position; a request is admitted into a free slot the
 moment one frees (no batch barrier), prefilled alone (B=1 cache,
-scattered into its slot row), and every decode step advances all live
-slots in lockstep through ONE jitted ``model.decode_step`` call with a
-(B,) positions vector — the KV-cache write is a vmapped per-row scatter
-(models/attention.py).  The legacy ``bucketed`` static scheduler was
-retired after its one release of fallback (PR 4); its sequential
-single-request oracle lives on in tests/test_continuous_batching.py.
+scattered into the slot's cache), and every decode step advances all
+live slots in lockstep through ONE jitted ``model.decode_step`` call
+with a (B,) positions vector.
+
+KV layout (``kv=``): since PR 7 the default for the uniform attention
+family is **paged** — per layer, one global pool of ``kv_blocks``
+fixed-size blocks (``block_size`` tokens) shared by every slot through
+a per-slot block table, so concurrency is bounded by *free blocks*
+(memory), not by a dense ``(max_batch, max_len)`` allocation.  Requests
+sharing a padded prompt prefix map their leading table entries to the
+same physical pages (``paged_kv.BlockPool`` prefix registry; an exact
+full-prompt hit also skips the whole B=1 prefill via memoized logits),
+and a shared page is copy-on-write: the first slot to scatter into a
+page with refcount > 1 copies it into its reserved block first.  A
+request that cannot get its blocks stays at the head of the FIFO queue
+— queued, never dropped.  ``kv="dense"`` keeps the pre-paged per-slot
+allocation for one release as the bitwise parity oracle (recurrent
+families — xlstm/griffin — and external-embed archs stay dense under
+``kv="auto"``).  Block tables are shape-stable: the decode jit traces
+ONCE however slots churn, which ``jit_traces`` exposes and
+benchmarks/tests assert.
 
 Sampling: greedy (``temperature=0``, the default) is the bitwise path
 every parity test pins.  ``temperature>0`` samples per slot with a
@@ -41,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import dima as dima_api
+from repro.inference.paged_kv import BlockPool, chain_key, tail_key
 
 
 @dataclass
@@ -60,7 +76,9 @@ class ServeEngine:
 
     def __init__(self, model, params, *, bucket: int = 32, max_batch: int = 8,
                  max_len: int = 512, dima=None, backend="reference",
-                 temperature: float = 0.0, top_k: int = 0, sample_key=None):
+                 temperature: float = 0.0, top_k: int = 0, sample_key=None,
+                 kv: str = "auto", block_size: int = 16,
+                 kv_blocks: Optional[int] = None):
         self.model = model
         self.params = params
         self.bucket = bucket
@@ -70,9 +88,39 @@ class ServeEngine:
         self.backend = dima_api.get_backend(backend)
         self.temperature = float(temperature)
         self.top_k = int(top_k)
+
+        paged_ok = (getattr(model.cfg, "uniform_attention", False)
+                    and not model.cfg.external_embed)
+        if kv == "auto":
+            kv = "paged" if paged_ok else "dense"
+        elif kv == "paged" and not paged_ok:
+            raise ValueError(
+                f"kv='paged' needs the uniform attention family with a "
+                f"token-id frontend; {model.cfg.name} doesn't qualify "
+                f"(use kv='dense' or 'auto')")
+        elif kv not in ("paged", "dense"):
+            raise ValueError(f"kv must be 'auto'|'paged'|'dense', got {kv!r}")
+        self.kv = kv
+        self.block_size = int(block_size)
+        self._blocks_per_seq = -(-max_len // self.block_size)
+        self._kv_len = self._blocks_per_seq * self.block_size
+        # default pool: the token capacity the dense (max_batch, max_len)
+        # table would hold, plus one CoW-reserve block per slot (a
+        # request whose prompt tail only partially fills its block
+        # admits with a reserved copy target), plus the scratch block —
+        # benchmarks comparing at matched memory pass kv_blocks
+        # explicitly
+        self.kv_blocks = (int(kv_blocks) if kv_blocks is not None
+                          else max_batch * (self._blocks_per_seq + 1))
+
         self.queue: list[Request] = []
         self.stats = {"requests": 0, "tokens": 0, "steps": 0,
-                      "energy_pj": 0.0}
+                      "energy_pj": 0.0, "prefix_hits": 0, "prefill_skips": 0,
+                      "cow_copies": 0, "kv_waits": 0}
+        #: jit trace counts per entry point — decode/insert/cow must stay
+        #: at 1 once warm (shape-stable block tables), asserted by
+        #: benchmarks and tests against silent recompiles
+        self.jit_traces = {"prefill": 0, "decode": 0, "insert": 0, "cow": 0}
         self._pj_per_token = 0.0
         self.n_banks = 0
         if dima is not None:
@@ -85,11 +133,29 @@ class ServeEngine:
                 self._pj_per_token, self.n_banks = (
                     dima_api.weights_energy_per_token(
                         model.cfg.active_param_count(), self.backend))
-        self._decode = jax.jit(
-            lambda p, c, t, pos: model.decode_step(p, c, pos, tokens=t,
-                                                   dima=dima))
-        self._prefill = jax.jit(
-            lambda p, c, t: model.prefill(p, c, tokens=t, dima=dima))
+        #: greedy paged decode folds the argmax into the decode dispatch
+        #: (one launch per step, no separate pick) — the token values are
+        #: unchanged (same logits, same first-max argmax), which the
+        #: parity tests pin; sampling keeps the separate per-slot pick,
+        #: and the dense oracle path stays exactly the pre-paged code
+        self._fused_pick = (self.kv == "paged" and self.temperature <= 0.0)
+        if self._fused_pick:
+            def _paged_greedy(p, c, t, pos, bt):
+                lg, c2 = model.decode_step(p, c, pos, tokens=t, dima=dima,
+                                           block_table=bt)
+                return jnp.argmax(lg, -1).astype(jnp.int32), c2
+            self._decode = self._jit_counting("decode", _paged_greedy)
+        elif self.kv == "paged":
+            self._decode = self._jit_counting(
+                "decode", lambda p, c, t, pos, bt: model.decode_step(
+                    p, c, pos, tokens=t, dima=dima, block_table=bt))
+        else:
+            self._decode = self._jit_counting(
+                "decode", lambda p, c, t, pos: model.decode_step(
+                    p, c, pos, tokens=t, dima=dima))
+        self._prefill = self._jit_counting(
+            "prefill", lambda p, c, t: model.prefill(p, c, tokens=t,
+                                                     dima=dima))
         if self.temperature > 0.0:
             key = (sample_key if sample_key is not None
                    else jax.random.PRNGKey(0))
@@ -106,6 +172,15 @@ class ServeEngine:
 
             self._pick = jax.jit(pick)
         self._slots_ready = False
+
+    def _jit_counting(self, name, fn):
+        """jit ``fn`` with a host-side trace counter: the wrapper body
+        runs only while tracing, so ``jit_traces[name]`` counts compiled
+        signatures, not calls."""
+        def counted(*args):
+            self.jit_traces[name] += 1
+            return fn(*args)
+        return jax.jit(counted)
 
     # -- shared -----------------------------------------------------------
 
@@ -148,13 +223,21 @@ class ServeEngine:
         if self.temperature <= 0.0:
             return np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
         return np.asarray(self._pick(
-            logits.astype(jnp.float32), jnp.asarray(slots, jnp.int32),
+            jnp.asarray(logits, jnp.float32), jnp.asarray(slots, jnp.int32),
             jnp.asarray(positions, jnp.int32)).astype(jnp.int32))
 
     @property
     def busy(self) -> bool:
         """True while requests are queued or occupy slots."""
         return bool(self.queue) or any(r is not None for r in self._live())
+
+    @property
+    def free_slots(self) -> int:
+        """Slots without a live request (admission may still wait on
+        free blocks in paged mode — this is the slot-table bound only)."""
+        if not self._slots_ready:
+            return self.max_batch
+        return sum(1 for r in self._slot_req if r is None)
 
     def run(self):
         """Drain the queue; returns completed requests."""
@@ -163,7 +246,7 @@ class ServeEngine:
             done.extend(self.step())
         return done
 
-    # -- continuous scheduler ---------------------------------------------
+    # -- slot table ---------------------------------------------------------
 
     def _live(self):
         return self._slot_req if self._slots_ready else []
@@ -175,6 +258,13 @@ class ServeEngine:
         self._slot_req: list[Optional[Request]] = [None] * B
         self._slot_pos = np.full((B,), L - 1, np.int32)   # parked
         self._slot_last = np.zeros((B,), np.int32)
+        if self.kv == "paged":
+            self._ensure_paged(B)
+        else:
+            self._ensure_dense(B, L)
+        self._slots_ready = True
+
+    def _ensure_dense(self, B, L):
         self._cache = self.model.init_cache(B, L)
         # per-leaf batch axis, discovered abstractly: the one dim that
         # changes with the batch argument (arch-agnostic — uniform stacks
@@ -193,60 +283,263 @@ class ServeEngine:
                     big, small.astype(big.dtype), row, axis=ax),
                 cache, sub, axes)
 
-        self._insert = jax.jit(insert)
-        self._slots_ready = True
+        self._insert = self._jit_counting("insert", insert)
+
+    def _ensure_paged(self, B):
+        nblk, bs = self._blocks_per_seq, self.block_size
+        self._pool = BlockPool(self.kv_blocks + 1, bs)     # +1: scratch
+        self._cache = self.model.init_paged_cache(self.kv_blocks + 1, bs)
+        self._tables = np.zeros((B, nblk), np.int32)       # 0 = scratch
+        self._tables_dev = None    # device copy, re-uploaded only on change
+        self._reserve: dict[int, int] = {}                 # slot -> CoW block
+
+        def insert(cache, sub, ids):
+            # sub: the B=1 dense prefill cache, reshaped into blocks and
+            # scattered at ``ids`` (shared/unused entries target the
+            # scratch block 0 — shared pages are never rewritten)
+            def one(big, small):
+                small = small.reshape((small.shape[0], nblk, bs)
+                                      + small.shape[3:])
+                return big.at[:, ids].set(small.astype(big.dtype))
+            return jax.tree_util.tree_map(one, cache, sub)
+
+        def copy_block(cache, src, dst):
+            return jax.tree_util.tree_map(
+                lambda x: x.at[:, dst].set(x[:, src]), cache)
+
+        self._insert = self._jit_counting("insert", insert)
+        self._copy = self._jit_counting("cow", copy_block)
+
+    # -- paged admission planning -------------------------------------------
+
+    def _prompt_keys(self, padded: np.ndarray, blen: int) -> list:
+        """Registry key per prompt block: chain keys for full blocks,
+        the fill-aware tail key for a partial last block."""
+        bs = self.block_size
+        nb = -(-blen // bs)
+        return [chain_key(padded, j, bs) if (j + 1) * bs <= blen
+                else tail_key(padded, blen)
+                for j in range(nb)]
+
+    def _paged_plan(self, req: Request, blen: int):
+        """Resolve prefix sharing and block demand for one admission.
+        Returns (needed, keys, shared_bids, tail_fill, cached_logits) —
+        ``shared_bids`` is the contiguous run of resident prefix pages
+        (not yet ref'd), ``cached_logits`` the memoized prefill logits
+        on an exact full-prompt hit."""
+        bs = self.block_size
+        padded = self._padded_prompt(req, blen)[0]
+        highest = min(blen + req.max_new - 2, self.max_len - 1)
+        needed = highest // bs + 1                  # blocks incl. decode tail
+        keys = self._prompt_keys(padded, blen)
+        shared = []
+        for key in keys:
+            bid = self._pool.lookup(key)
+            if bid is None:
+                break
+            shared.append(bid)
+        logits = (self._pool.prefill_logits(keys[-1])
+                  if len(shared) == len(keys) else None)
+        return needed, keys, shared, blen % bs, logits
+
+    def _release_slot(self, slot: int):
+        for j in range(self._blocks_per_seq):
+            bid = int(self._tables[slot, j])
+            if bid:
+                self._pool.release(bid)
+        self._tables[slot] = 0
+        self._tables_dev = None
+        res = self._reserve.pop(slot, None)
+        if res is not None:
+            self._pool.release(res)
+
+    def _cow_check(self):
+        """Copy-on-write: a slot about to scatter into a page someone
+        else also maps (refcount > 1) first copies it into the block it
+        reserved at admission, so the frozen original keeps serving the
+        prefix registry and every co-mapping slot.  Only slots holding a
+        reserve can ever need this — writes land in prompt-tail or fresh
+        decode blocks, and only a partial tail is ever shared."""
+        if not self._reserve:
+            return
+        bs = self.block_size
+        for i in [s for s in self._reserve
+                  if self._slot_req[s] is not None]:
+            j = int(self._slot_pos[i]) // bs
+            bid = int(self._tables[i, j])
+            if bid and self._pool.refcount(bid) > 1:
+                dst = self._reserve.pop(i)   # reserved iff tail is partial
+                self._cache = self._copy(self._cache,
+                                         jnp.asarray(bid, jnp.int32),
+                                         jnp.asarray(dst, jnp.int32))
+                self._tables[i, j] = dst
+                self._tables_dev = None
+                self._pool.release(bid)
+                self.stats["cow_copies"] += 1
+
+    # -- admission ------------------------------------------------------------
 
     def _admit(self) -> list[Request]:
         """Fill free slots from the queue (FIFO). Prefill is per-request
-        (B=1) and scattered into the slot row; the prefill's pick is the
-        request's first generated token.  Returns requests that complete
-        during admission (max_new <= 1 or a cache-filling prompt)."""
+        (B=1) and scattered into the slot's cache; the prefill's pick is
+        the request's first generated token.  Paged mode additionally
+        waits (head-of-line, never drops) when the block pool can't cover
+        the request's worst-case footprint, maps resident prefix pages
+        instead of allocating, and skips the prefill dispatch entirely on
+        an exact full-prompt hit.  Returns requests that complete during
+        admission (max_new <= 1 or a cache-filling prompt)."""
         finished = []
         for slot in range(self.max_batch):
             if not self.queue:
                 break
             if self._slot_req[slot] is not None:
                 continue
-            r = self.queue.pop(0)
+            r = self.queue[0]
             if r.max_new <= 0:                   # nothing to generate
+                self.queue.pop(0)
                 self._finish(r)
                 finished.append(r)
                 continue
             blen = self._blen(r)
-            sub = self.model.init_cache(1, self.max_len)
-            logits, sub = self._prefill(self.params, sub,
-                                        jnp.asarray(self._padded_prompt(r, blen)))
-            self._cache = self._insert(self._cache, sub, slot)
-            nxt = int(self._next_tokens(logits, [slot], [blen])[0])
-            r.out.append(nxt)
-            self._account(r)
-            if len(r.out) >= r.max_new or blen >= self.max_len:
-                self._finish(r)                  # prefill token was enough
+            admitted = (self._admit_paged(r, slot, blen)
+                        if self.kv == "paged"
+                        else self._admit_dense(r, slot, blen))
+            if admitted is None:                 # paged: waiting on blocks
+                break
+            self.queue.pop(0)
+            if admitted:                         # finished at admission
                 finished.append(r)
-                continue
-            self._slot_req[slot] = r
-            self._slot_pos[slot] = blen
-            self._slot_last[slot] = nxt
         return finished
+
+    def _admit_dense(self, r: Request, slot: int, blen: int) -> bool:
+        sub = self.model.init_cache(1, self.max_len)
+        logits, sub = self._prefill(self.params, sub,
+                                    jnp.asarray(self._padded_prompt(r, blen)))
+        self._cache = self._insert(self._cache, sub, slot)
+        return self._seat(r, slot, blen, logits)
+
+    def _admit_paged(self, r: Request, slot: int, blen: int):
+        """Returns True (finished at admission) / False (seated) / None
+        (insufficient free blocks — caller keeps the request queued)."""
+        bs = self.block_size
+        if r.max_new <= 1 or blen >= self.max_len:
+            # completes at admission: the pick needs no cache at all —
+            # prefill logits are attention over the prompt tokens only
+            sub = self.model.init_cache(1, self._kv_len)
+            logits, _ = self._prefill(
+                self.params, sub, jnp.asarray(self._padded_prompt(r, blen)))
+            seated = self._seat(r, slot, blen, logits)
+            assert seated
+            return True
+
+        needed, keys, shared, tail_fill, cached = self._paged_plan(r, blen)
+        fresh_n = needed - len(shared) + (1 if tail_fill else 0)
+        if needed + (1 if tail_fill else 0) > self._pool.usable:
+            raise ValueError(
+                f"request {r.rid}: needs up to "
+                f"{needed + (1 if tail_fill else 0)} blocks, pool holds "
+                f"{self._pool.usable} (kv_blocks) — raise kv_blocks or "
+                f"lower max_new")
+        # reviving an idle shared page removes it from the reclaimable
+        # count, so budget those alongside the fresh blocks
+        k_idle = sum(1 for b in shared if self._pool.is_idle(b))
+        if fresh_n + k_idle > self._pool.free:
+            self.stats["kv_waits"] += 1
+            return None                           # queued, not dropped
+
+        row = np.zeros(self._blocks_per_seq, np.int32)
+        for j, bid in enumerate(shared):          # revive BEFORE alloc —
+            row[j] = self._pool.share(bid)        # alloc may reclaim idle
+        fresh = self._pool.alloc(fresh_n)
+        if tail_fill:
+            self._reserve[slot] = fresh.pop()     # CoW copy target
+        for j in range(len(shared), needed):
+            row[j] = fresh.pop()
+        self._tables[slot] = row
+        self._tables_dev = None
+        if shared:
+            self.stats["prefix_hits"] += len(shared)
+
+        tok = None
+        if cached is not None:                    # exact duplicate prompt:
+            self.stats["prefill_skips"] += 1      # memoized logits, no jit
+            if self.temperature <= 0.0:           # greedy: memoized pick too
+                tok = self._pool.prefill_token(keys[-1])
+            logits = None if tok is not None else jnp.asarray(cached)
+        else:
+            sub = self.model.init_cache(1, self._kv_len)
+            logits, sub = self._prefill(
+                self.params, sub, jnp.asarray(self._padded_prompt(r, blen)))
+            ids = np.zeros(self._blocks_per_seq, np.int32)  # 0 = scratch
+            for j in range(len(shared), len(keys)):
+                ids[j] = row[j]
+            self._cache = self._insert(self._cache, sub,
+                                       jnp.asarray(ids, jnp.int32))
+            lg_np = np.asarray(logits)
+            for j in range(len(shared), len(keys)):
+                self._pool.register(
+                    keys[j], int(row[j]),
+                    logits=lg_np if j == len(keys) - 1 else None)
+        seated = self._seat(r, slot, blen, logits, tok=tok)
+        if tok is None and self.temperature <= 0.0:
+            # the pick is a pure function of the prefill logits under
+            # greedy decode, so memoize it next to them: the next hit on
+            # this prompt admits with zero device dispatches
+            self._pool.set_token(keys[-1], r.out[-1])
+        if seated:                                # finished immediately
+            self._release_slot(slot)
+        return seated
+
+    def _seat(self, r: Request, slot: int, blen: int, logits,
+              tok: int | None = None) -> bool:
+        """Shared admission tail: pick the first token, account, and
+        either seat the request in the slot or report it finished.
+        ``tok`` short-circuits the pick with a memoized greedy token."""
+        nxt = (tok if tok is not None
+               else int(self._next_tokens(logits, [slot], [blen])[0]))
+        r.out.append(nxt)
+        self._account(r)
+        if len(r.out) >= r.max_new or blen >= self.max_len:
+            self._finish(r)                       # prefill token was enough
+            return True
+        self._slot_req[slot] = r
+        self._slot_pos[slot] = blen
+        self._slot_last[slot] = nxt
+        return False
+
+    # -- the scheduler tick ---------------------------------------------------
 
     def step(self) -> list[Request]:
         """One scheduler tick: admit into free slots, then advance every
-        live slot one token (free slots ride along parked at the last
-        cache row — their writes land in their own unused row and are
-        fully overwritten by the next admission's scatter).  Returns the
-        requests completed during this tick."""
+        live slot one token (free slots ride along parked — dense: their
+        writes land in their own unused row; paged: in the scratch block
+        their zeroed table maps to).  Returns the requests completed
+        during this tick."""
         self._ensure_slots()
         finished = self._admit()
         live = [i for i in range(self.max_batch)
                 if self._slot_req[i] is not None]
         if not live:
             return finished
-        logits, self._cache = self._decode(
-            self.params, self._cache,
-            jnp.asarray(self._slot_last[:, None]),
-            jnp.asarray(self._slot_pos))
-        nxt = self._next_tokens(logits, np.arange(self.max_batch),
-                                self._slot_pos + 1)
+        if self.kv == "paged":
+            self._cow_check()
+            if self._tables_dev is None:
+                self._tables_dev = jnp.asarray(self._tables)
+            out, self._cache = self._decode(
+                self.params, self._cache,
+                jnp.asarray(self._slot_last[:, None]),
+                jnp.asarray(self._slot_pos),
+                self._tables_dev)
+            nxt = (np.asarray(out) if self._fused_pick
+                   else self._next_tokens(out, np.arange(self.max_batch),
+                                          self._slot_pos + 1))
+        else:
+            logits, self._cache = self._decode(
+                self.params, self._cache,
+                jnp.asarray(self._slot_last[:, None]),
+                jnp.asarray(self._slot_pos))
+            nxt = self._next_tokens(logits, np.arange(self.max_batch),
+                                    self._slot_pos + 1)
         self.stats["steps"] += 1
         for i in live:
             r = self._slot_req[i]
@@ -259,4 +552,6 @@ class ServeEngine:
                 finished.append(r)
                 self._slot_req[i] = None
                 self._slot_pos[i] = self.max_len - 1   # park
+                if self.kv == "paged":
+                    self._release_slot(i)
         return finished

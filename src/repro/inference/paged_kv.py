@@ -1,0 +1,186 @@
+"""Paged KV-cache block pool: host-side allocator, refcounts, and the
+prefix registry behind ``ServeEngine(kv="paged")`` (docs/serving.md).
+
+The device side is a global pool of ``n_blocks`` fixed-size blocks per
+layer (``models/attention.py``: gather/scatter reads and writes indexed
+by a per-slot block table).  This module owns everything that is *not*
+shape-stable and therefore must live on the host:
+
+* **free list + refcounts** — block 0 is reserved as the scratch block
+  (free slots park their lockstep writes there; unallocated block-table
+  entries point at it, and their reads are exactly masked out), so
+  usable capacity is ``n_blocks - 1``.
+* **prefix registry** — maps a *chain key* (the padded prompt tokens a
+  block stores, plus its block index / fill) to the resident physical
+  block holding exactly those K/V rows.  Requests sharing a padded
+  prompt prefix map their leading block-table entries to the same
+  physical pages; a shared page is copy-on-write — any slot about to
+  scatter into a page with refcount > 1 first copies it into its
+  reserved block (engine ``_cow_check``).
+* **idle LRU** — a registered block whose refcount drops to zero is
+  not freed: it parks on an idle list, contents frozen (no block table
+  maps it, so nothing can write it), and keeps serving registry hits —
+  this is what makes a *recurring* prompt (system prompt, few-shot
+  header) hit the cache after its original request finished.  The free
+  list is tried first on allocation; only under pool pressure are idle
+  blocks reclaimed, oldest first, purging their keys.  Capacity
+  accounting (``free``) counts both, so admission stays memory-bound.
+* **prefill memo** — a full-prompt registry hit additionally carries
+  the cached last-token prefill logits, letting the engine skip the
+  whole B=1 prefill dispatch for an exact duplicate of a resident
+  prompt (greedy picks are bitwise identical; sampled picks re-draw
+  from the identical logits with the admitting slot's own stream).
+
+Entries live exactly as long as their block stays resident, so the
+registry only ever hands out pages whose K/V rows are on the device.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Optional
+
+import numpy as np
+
+
+def chain_key(padded: np.ndarray, j: int, block_size: int) -> tuple:
+    """Registry key for full prompt block ``j``: the block index plus
+    every padded token up to and including the block (the K/V rows a
+    block stores are a pure function of the padded prefix, so equal
+    keys mean bitwise-equal block contents)."""
+    return ("blk", j, padded[: (j + 1) * block_size].tobytes())
+
+
+def tail_key(padded: np.ndarray, blen: int) -> tuple:
+    """Registry key for the partially-filled tail block of a ``blen``-
+    token padded prompt (fill count is part of the key: a 20-token and
+    a 24-token prompt sharing 16 leading tokens still differ here)."""
+    return ("tail", blen, padded[:blen].tobytes())
+
+
+class BlockPool:
+    """Fixed pool of ``n_blocks`` blocks of ``block_size`` tokens.
+
+    Block ids index the device pool's leading block axis; id 0 is the
+    reserved scratch block and is never handed out.  All bookkeeping is
+    plain Python — the device never sees refcounts, only block tables.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks < 2:
+            raise ValueError(f"need >= 2 blocks (1 usable + scratch), "
+                             f"got {n_blocks}")
+        self.n_blocks = int(n_blocks)
+        self.block_size = int(block_size)
+        self._free = list(range(n_blocks - 1, 0, -1))   # block 0 = scratch
+        self._idle: OrderedDict[int, None] = OrderedDict()  # LRU, keys kept
+        self._ref: dict[int, int] = {}
+        self._registry: dict[tuple, int] = {}
+        self._bid_keys: dict[int, set] = {}
+        self._logits: dict[tuple, np.ndarray] = {}
+        self._tokens: dict[tuple, int] = {}
+
+    # -- capacity -----------------------------------------------------------
+
+    @property
+    def usable(self) -> int:
+        """Total allocatable blocks (pool minus the scratch block)."""
+        return self.n_blocks - 1
+
+    @property
+    def free(self) -> int:
+        """Blocks an admission can claim: truly free + reclaimable idle."""
+        return len(self._free) + len(self._idle)
+
+    @property
+    def live(self) -> int:
+        return len(self._ref)
+
+    @property
+    def idle(self) -> int:
+        """Zero-ref blocks parked warm for the prefix registry."""
+        return len(self._idle)
+
+    def is_idle(self, bid: int) -> bool:
+        return bid in self._idle
+
+    # -- alloc / refcount ---------------------------------------------------
+
+    def _purge_keys(self, bid: int) -> None:
+        for key in self._bid_keys.pop(bid, ()):
+            self._registry.pop(key, None)
+            self._logits.pop(key, None)
+            self._tokens.pop(key, None)
+
+    def alloc(self, n: int) -> list[int]:
+        """Take ``n`` fresh blocks (refcount 1 each), preferring the free
+        list and reclaiming oldest idle blocks (purging their registry
+        keys) only under pressure.  Raises if even that falls short —
+        callers check ``free`` first (admission waits, never
+        half-allocates), and must revive any idle pages they plan to
+        share BEFORE allocating, or this may reclaim them."""
+        if n > self.free:
+            raise RuntimeError(f"pool exhausted: want {n}, free {self.free}")
+        out = []
+        for _ in range(n):
+            if self._free:
+                bid = self._free.pop()
+            else:
+                bid, _ = self._idle.popitem(last=False)   # oldest first
+                self._purge_keys(bid)
+            self._ref[bid] = 1
+            out.append(bid)
+        return out
+
+    def share(self, bid: int) -> int:
+        """Add a reference to a resident block (a registry hit); revives
+        an idle block, keeping its keys."""
+        if bid in self._idle:
+            del self._idle[bid]
+            self._ref[bid] = 1
+        else:
+            self._ref[bid] += 1
+        return bid
+
+    def refcount(self, bid: int) -> int:
+        return self._ref.get(bid, 0)
+
+    def release(self, bid: int) -> None:
+        """Drop one reference.  At zero, a registered block parks on the
+        idle LRU (contents frozen, registry keys kept warm); an
+        unregistered one returns straight to the free list."""
+        n = self._ref[bid] - 1
+        if n > 0:
+            self._ref[bid] = n
+            return
+        del self._ref[bid]
+        if self._bid_keys.get(bid):
+            self._idle[bid] = None
+        else:
+            self._free.append(bid)
+
+    # -- prefix registry ----------------------------------------------------
+
+    def lookup(self, key: tuple) -> Optional[int]:
+        return self._registry.get(key)
+
+    def register(self, key: tuple, bid: int,
+                 logits: Optional[np.ndarray] = None) -> None:
+        """Publish ``bid`` as the resident page for ``key`` (idempotent
+        for an already-registered key).  ``logits`` memoizes the last-
+        token prefill logits on the final prompt block's key."""
+        self._registry[key] = bid
+        self._bid_keys.setdefault(bid, set()).add(key)
+        if logits is not None:
+            self._logits[key] = logits
+
+    def prefill_logits(self, key: tuple) -> Optional[np.ndarray]:
+        return self._logits.get(key)
+
+    def set_token(self, key: tuple, token: int) -> None:
+        """Memoize the greedy pick from the key's prefill logits — a
+        registry hit under greedy decode then admits with zero device
+        dispatches (sampling still re-draws from the memoized logits)."""
+        self._tokens[key] = int(token)
+
+    def prefill_token(self, key: tuple) -> Optional[int]:
+        return self._tokens.get(key)

@@ -1,0 +1,372 @@
+"""Multi-replica serving tier: N data-parallel ``ServeEngine`` replicas
+behind one shared FIFO, under open-loop (Poisson wall-clock) load.
+
+    PYTHONPATH=src python -m repro.launch.replicas --replicas 2 \
+        --rate 20 --requests 48            # or just: --smoke
+
+Each replica is a separate *process* (spawn, not fork: the per-replica
+environment — ``XLA_FLAGS=--xla_force_host_platform_device_count=1``,
+``TF_CPP_MIN_LOG_LEVEL``, tcmalloc large-alloc silencing, per SNIPPETS
+snippet 1 — must be set before its jax initializes) running its own
+paged-KV ``ServeEngine`` over identically-initialized params.  A single
+``multiprocessing.Queue`` is the fleet's FIFO: replicas race to pull,
+so a hot replica with free blocks naturally takes more of the load and
+no request is ever assigned to a stalled engine.  ``--affinity prompt``
+switches to prefix-affinity dispatch (one queue per replica, routed by
+a stable hash of the prompt bytes), so duplicate prompts always land on
+the replica whose private prefix registry already holds them — the
+paged fleet's steady-state configuration.  Workers signal readiness
+only after a warm-up drain, so compile time never pollutes latency
+percentiles.
+
+Load is open-loop: arrivals are a Poisson process in *wall time* at
+``--rate`` req/s, submitted whether or not the fleet keeps up — queue
+growth shows up as latency, exactly like a real ingress.  The report
+(``run_fleet``) carries fleet tokens/s, request-latency p50/p99, SLO
+attainment (fraction of requests finishing within ``--slo-ms``), and
+per-replica utilization (busy wall fraction + engine stats, paged
+counters included).  ``--smoke`` runs 2 tiny replicas and asserts the
+fleet's tokens are identical to a local sequential dense-oracle drain
+(greedy decode is batching- and replica-invariant), which is the CI
+gate.  ``benchmarks/bench_serving.py`` drives the same ``run_fleet``
+for the committed BENCH_serving.json replica sweep.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import multiprocessing as mp
+import os
+import queue as queue_mod
+import sys
+import time
+import zlib
+
+import numpy as np
+
+READY_TIMEOUT_S = 600.0     # per-replica model build + warm-up compile
+POLL_S = 0.002              # idle worker poll interval
+
+
+def replica_env(idx: int) -> dict:
+    """Per-replica process environment (SNIPPETS.md snippet 1): pin one
+    XLA host device per replica, silence TF/tcmalloc chatter.  tcmalloc
+    itself is LD_PRELOADed by the operator when present — a missing lib
+    must not kill the worker, so we only set its report threshold."""
+    return {
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=1",
+        "TF_CPP_MIN_LOG_LEVEL": "4",
+        "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD": "60000000000",
+        "DIMA_REPLICA": str(idx),
+    }
+
+
+def make_shared_trace(n_requests: int, *, seed=0, vocab=256, n_templates=3,
+                      template_len=28, suffix_len=4, max_news=(4, 16),
+                      dup_frac=0.35):
+    """Template-heavy request stream: every prompt is one of
+    ``n_templates`` shared templates plus a short user suffix, and
+    ``dup_frac`` of requests repeat a full earlier prompt verbatim —
+    the shared-prefix / duplicate-prompt mix (few-shot headers, system
+    prompts) the paged prefix registry exists for.  Returns (prompts,
+    max_new)."""
+    rng = np.random.default_rng(seed)
+    templates = [rng.integers(0, vocab, template_len).astype(np.int32)
+                 for _ in range(n_templates)]
+    prompts, max_new = [], []
+    for i in range(n_requests):
+        if prompts and rng.random() < dup_frac:
+            prompts.append(prompts[int(rng.integers(0, len(prompts)))].copy())
+        else:
+            t = templates[int(rng.integers(0, n_templates))]
+            sfx = rng.integers(0, vocab, suffix_len).astype(np.int32)
+            prompts.append(np.concatenate([t, sfx]))
+        max_new.append(int(rng.integers(max_news[0], max_news[1] + 1)))
+    return prompts, max_new
+
+
+def _build_engine(spec: dict):
+    """Construct the (reduced) model + ServeEngine a worker serves.
+    Imported lazily: workers must set their env before jax loads."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import RunConfig, get_arch, reduced
+    from repro.inference import ServeEngine
+    from repro.models import LM
+
+    cfg = dataclasses.replace(reduced(get_arch(spec["arch"])),
+                              dtype="float32")
+    model = LM(cfg, RunConfig())
+    params = model.init(jax.random.PRNGKey(spec["seed"]))
+    eng = ServeEngine(model, params, bucket=spec["bucket"],
+                      max_batch=spec["max_batch"], max_len=spec["max_len"],
+                      kv=spec["kv"], block_size=spec["block_size"],
+                      kv_blocks=spec["kv_blocks"])
+    return model, params, eng
+
+
+def _worker(idx: int, spec: dict, req_q, res_q, stop_evt):
+    """Replica main: warm up, signal ready, then race the shared FIFO —
+    pull whatever is visible, advance the engine one lockstep tick,
+    repeat.  Runs until the parent sets ``stop_evt`` (it only does so
+    once every request has reported done, so the queue is empty)."""
+    os.environ.update(replica_env(idx))
+    from repro.inference import Request
+
+    _, _, eng = _build_engine(spec)
+    warm = Request(rid=-1, prompt=np.arange(1, 5, dtype=np.int32), max_new=3)
+    eng.submit(warm)
+    eng.run()
+    warm_stats = dict(eng.stats)
+    res_q.put({"kind": "ready", "replica": idx})
+
+    busy_s = 0.0
+    t_ready = time.time()
+    while True:
+        pulled = False
+        # pull only what this replica can seat: hoarding beyond the free
+        # slots would starve an idle peer racing the same FIFO
+        while eng.free_slots > len(eng.queue):
+            try:
+                rid, prompt, mx, t_sub = req_q.get_nowait()
+            except queue_mod.Empty:
+                break
+            eng.submit(Request(rid=rid,
+                               prompt=np.asarray(prompt, np.int32),
+                               max_new=mx, submitted_at=t_sub))
+            pulled = True
+        if eng.busy:
+            t0 = time.time()
+            for r in eng.step():
+                if r.rid < 0:
+                    continue
+                res_q.put({"kind": "done", "replica": idx, "rid": r.rid,
+                           "out": [int(t) for t in r.out],
+                           "submitted_at": r.submitted_at,
+                           "done_at": r.done_at,
+                           "energy_pj": r.energy_pj})
+            busy_s += time.time() - t0
+        elif stop_evt.is_set():
+            break
+        elif not pulled:
+            time.sleep(POLL_S)
+    wall = max(time.time() - t_ready, 1e-9)
+    res_q.put({"kind": "stats", "replica": idx,
+               "utilization": round(busy_s / wall, 4),
+               "busy_s": round(busy_s, 4), "wall_s": round(wall, 4),
+               "jit_traces": dict(eng.jit_traces),
+               "engine": {k: (round(v, 3) if isinstance(v, float) else v)
+                          for k, v in eng.stats.items()},
+               "warm": {k: warm_stats[k] for k in ("tokens", "steps")}})
+
+
+def oracle_outputs(spec: dict, prompts, max_new) -> dict:
+    """Sequential dense single-engine drain of the same requests — the
+    token-identity reference for the fleet (greedy decode: same params,
+    same prompts → same tokens, regardless of batching or replica)."""
+    from repro.inference import Request
+
+    spec = dict(spec, kv="dense")
+    _, _, eng = _build_engine(spec)
+    out = {}
+    for i, (p, m) in enumerate(zip(prompts, max_new)):
+        eng.submit(Request(rid=i, prompt=p.copy(), max_new=m))
+        for r in eng.run():
+            out[r.rid] = list(r.out)
+    return out
+
+
+WARM_RID = 10_000_000            # rids >= this mark warm-up traffic
+
+
+def run_fleet(*, n_replicas=2, rate_rps=20.0, n_requests=48, arch="gemma3-1b",
+              kv="paged", seed=0, max_batch=8, max_len=64, bucket=32,
+              block_size=16, kv_blocks=None, slo_ms=2000.0, trace=None,
+              check_tokens=False, mp_ctx="spawn", warm_passes=1,
+              affinity=None):
+    """Launch ``n_replicas`` engine processes behind one FIFO, drive the
+    open-loop Poisson trace through them, and return the fleet report.
+
+    ``warm_passes`` full closed-loop drains of the same trace run first
+    and are discarded, so the timed pass measures a steady-state server:
+    every jit shape compiled and (paged) the prefix registry warm — the
+    same protocol as bench_serving's same-engine warm drains.
+
+    ``affinity="prompt"`` switches dispatch from the racing FIFO to
+    prefix-affinity routing: each request goes to the replica picked by
+    a stable hash of its prompt bytes, so an exact duplicate always
+    lands on the replica whose prefix registry holds it (the per-replica
+    registries are private — under FIFO racing a duplicate has a
+    ``1/n_replicas`` chance of hitting the registry that saw the
+    original).  Greedy tokens are routing-invariant, so the oracle check
+    is unaffected."""
+    spec = {"arch": arch, "kv": kv, "seed": seed, "max_batch": max_batch,
+            "max_len": max_len, "bucket": bucket, "block_size": block_size,
+            "kv_blocks": kv_blocks}
+    prompts, max_new = trace if trace is not None else make_shared_trace(
+        n_requests, seed=seed)
+    n_requests = len(prompts)
+
+    ctx = mp.get_context(mp_ctx)
+    res_q = ctx.Queue()
+    stop_evt = ctx.Event()
+    if affinity == "prompt":
+        req_qs = [ctx.Queue() for _ in range(n_replicas)]
+        home = [zlib.crc32(p.tobytes()) % n_replicas for p in prompts]
+    elif affinity is None:
+        shared = ctx.Queue()              # replicas race one FIFO
+        req_qs = [shared] * n_replicas
+        home = [0] * n_requests           # any queue IS the shared queue
+    else:
+        raise ValueError(f"affinity must be None or 'prompt', "
+                         f"got {affinity!r}")
+    procs = [ctx.Process(target=_worker, args=(i, spec, req_qs[i], res_q,
+                                               stop_evt), daemon=True)
+             for i in range(n_replicas)]
+    for p in procs:
+        p.start()
+
+    results, stats, ready = {}, {}, 0
+    try:
+        while ready < n_replicas:
+            msg = res_q.get(timeout=READY_TIMEOUT_S)
+            assert msg["kind"] == "ready", msg
+            ready += 1
+
+        for w in range(warm_passes):         # discarded steady-state warm
+            for i in range(n_requests):
+                req_qs[home[i]].put((WARM_RID + w * n_requests + i,
+                                     prompts[i].tolist(), int(max_new[i]),
+                                     time.time()))
+            got = 0
+            while got < n_requests:
+                msg = res_q.get(timeout=READY_TIMEOUT_S)
+                got += (msg["kind"] == "done"
+                        and msg["rid"] >= WARM_RID)
+
+        rng = np.random.default_rng(seed + 1)
+        arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, n_requests))
+        t0 = time.time()
+        for i in range(n_requests):
+            while True:                       # pace the open-loop clock
+                lag = t0 + arrivals[i] - time.time()
+                if lag <= 0:
+                    break
+                time.sleep(min(lag, 0.005))
+                while True:                   # keep draining while pacing
+                    try:
+                        msg = res_q.get_nowait()
+                    except queue_mod.Empty:
+                        break
+                    results[msg["rid"]] = msg
+            req_qs[home[i]].put((i, prompts[i].tolist(), int(max_new[i]),
+                                 time.time()))
+        while len(results) < n_requests:
+            msg = res_q.get(timeout=READY_TIMEOUT_S)
+            if msg["kind"] == "done":
+                results[msg["rid"]] = msg
+        stop_evt.set()
+        while len(stats) < n_replicas:
+            msg = res_q.get(timeout=READY_TIMEOUT_S)
+            if msg["kind"] == "stats":
+                stats[msg["replica"]] = msg
+        for p in procs:
+            p.join(timeout=60)
+    finally:
+        stop_evt.set()
+        for p in procs:
+            if p.is_alive():
+                p.terminate()
+
+    lat = np.array([results[i]["done_at"] - results[i]["submitted_at"]
+                    for i in range(n_requests)])
+    last_done = max(results[i]["done_at"] for i in range(n_requests))
+    tokens = sum(len(results[i]["out"]) for i in range(n_requests))
+    wall = max(last_done - t0, 1e-9)
+    per_replica = {}
+    for i in sorted(stats):
+        s = stats[i]
+        per_replica[f"replica_{i}"] = {
+            "requests": sum(1 for r in results.values()
+                            if r["replica"] == i),
+            "utilization": s["utilization"],
+            "jit_traces": s["jit_traces"], "engine": s["engine"]}
+    rec = {
+        "replicas": n_replicas, "kv": kv,
+        "dispatch": affinity or "fifo",
+        "rate_rps": round(float(rate_rps), 3), "requests": n_requests,
+        "tokens": tokens, "wall_s": round(wall, 4),
+        "fleet_tokens_per_s": round(tokens / wall, 2),
+        "latency_p50_s": round(float(np.percentile(lat, 50)), 4),
+        "latency_p99_s": round(float(np.percentile(lat, 99)), 4),
+        "slo_ms": slo_ms,
+        "slo_attainment": round(float(np.mean(lat <= slo_ms / 1e3)), 4),
+        "per_replica": per_replica,
+    }
+    if check_tokens:
+        want = oracle_outputs(spec, prompts, max_new)
+        got = {i: results[i]["out"] for i in range(n_requests)}
+        if got != want:
+            bad = sorted(i for i in want if got.get(i) != want[i])
+            raise RuntimeError(
+                f"fleet tokens diverged from the sequential dense oracle "
+                f"on requests {bad[:8]} — greedy decode must be replica- "
+                f"and paging-invariant")
+        rec["token_identity"] = "ok"
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="open-loop Poisson arrival rate (requests/s)")
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--kv", default="paged",
+                    choices=["auto", "paged", "dense"])
+    ap.add_argument("--affinity", default=None,
+                    choices=["prompt"],
+                    help="route requests to replicas by prompt hash "
+                         "(duplicates hit the owning prefix registry) "
+                         "instead of racing one FIFO")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--bucket", type=int, default=32)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--kv-blocks", type=int, default=None)
+    ap.add_argument("--slo-ms", type=float, default=2000.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check-tokens", action="store_true",
+                    help="assert fleet tokens == sequential dense oracle")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: 2 tiny replicas, 10 requests, token-"
+                         "identity assert vs the dense oracle")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        rec = run_fleet(n_replicas=2, rate_rps=10.0, n_requests=10,
+                        arch=args.arch, kv=args.kv, seed=args.seed,
+                        max_batch=4, max_len=64, bucket=32, block_size=16,
+                        slo_ms=args.slo_ms, check_tokens=True,
+                        trace=make_shared_trace(10, seed=args.seed,
+                                                max_news=(2, 8)))
+    else:
+        rec = run_fleet(n_replicas=args.replicas, rate_rps=args.rate,
+                        n_requests=args.requests, arch=args.arch, kv=args.kv,
+                        seed=args.seed, max_batch=args.max_batch,
+                        max_len=args.max_len, bucket=args.bucket,
+                        block_size=args.block_size, kv_blocks=args.kv_blocks,
+                        slo_ms=args.slo_ms, check_tokens=args.check_tokens,
+                        affinity=args.affinity)
+    print(json.dumps(rec, indent=1))
+    print(f"[replicas] {rec['replicas']}x {rec['kv']}: "
+          f"{rec['fleet_tokens_per_s']} tok/s, p50 {rec['latency_p50_s']}s, "
+          f"p99 {rec['latency_p99_s']}s, SLO {rec['slo_attainment']:.0%}"
+          + (", token identity ok" if rec.get("token_identity") else ""))
+    return rec
+
+
+if __name__ == "__main__":
+    sys.exit(0 if main() else 1)

@@ -7,8 +7,13 @@ weights — the paper's inference technique as a serving feature.
 Requests route through ``inference.ServeEngine`` (continuous batching:
 per-slot positions, vmapped per-row cache writes — docs/serving.md; the
 legacy ``bucketed`` static path was retired after its one release of
-fallback).  Frontend-embedding archs (``external_embed``) stay on the
-static ``generate()`` path — the engine's slot table is token-id based.
+fallback).  ``--kv`` selects the KV layout: ``paged`` (default under
+``auto`` where supported) serves from the global block pool with prefix
+reuse and copy-on-write, ``dense`` keeps the per-slot contiguous layout
+(one release of bitwise-parity oracle); ``--block-size``/``--kv-blocks``
+size the pool.  Frontend-embedding archs (``external_embed``) stay on
+the static ``generate()`` path — the engine's slot table is token-id
+based.
 
 ``--quant dima`` stores every matmul weight as sub-ranged offset-binary
 uint8 (quant/subrange.py) and (with --dima-noise) injects the calibrated
@@ -108,6 +113,16 @@ def main(argv=None):
     ap.add_argument("--n-banks", type=int, default=None,
                     help="bank count for --backend multibank "
                          "(default: the paper's 32-bank scenario)")
+    ap.add_argument("--kv", default="auto",
+                    choices=["auto", "paged", "dense"],
+                    help="KV-cache layout: paged = global block pool + "
+                         "prefix reuse (docs/serving.md); auto picks paged "
+                         "when the arch supports it")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block when --kv paged")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="block-pool size when --kv paged (default: enough "
+                         "for max_batch full-length sequences)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="per-slot sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -180,6 +195,7 @@ def main(argv=None):
         eng = ServeEngine(
             model, params, bucket=args.prompt_len, max_batch=args.batch,
             max_len=args.prompt_len + args.gen, dima=dima,
+            kv=args.kv, block_size=args.block_size, kv_blocks=args.kv_blocks,
             backend=(dima_api.get_backend(args.backend)
                      if args.n_banks is None else
                      dima_api.get_backend(args.backend, n_banks=args.n_banks)),

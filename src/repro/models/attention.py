@@ -184,11 +184,67 @@ def _cache_read(cache, name, dtype):
     return arr
 
 
+# -- paged layout (block pool + per-slot block tables) -----------------------
+#
+# A paged cache leaf is a global pool ``(n_blocks, block_size, ...)``
+# shared by every slot; ``block_table`` (B, blocks_per_seq) maps a slot's
+# logical block index to a physical pool block (0 = the reserved scratch
+# block: free slots park their writes there and unallocated entries
+# gather garbage that the position mask zeroes exactly).  The gathered
+# per-slot view is bit-identical to the dense (B, S, ...) layout at
+# every position a slot wrote, so decode_attention runs unchanged on it.
+
+def _paged_write(pool, val, pos, block_table):
+    """Scatter ``val`` (B, 1, ...) into the pool at each row's logical
+    position ``pos[b]`` via its block table (flat token-index scatter:
+    physical block * block_size + offset)."""
+    bs = pool.shape[1]
+    posv = jnp.broadcast_to(
+        jnp.reshape(jnp.asarray(pos, jnp.int32), (-1,)), (val.shape[0],))
+    phys = jnp.take_along_axis(block_table, (posv // bs)[:, None], 1)[:, 0]
+    flat = pool.reshape((pool.shape[0] * bs,) + pool.shape[2:])
+    flat = flat.at[phys * bs + posv % bs].set(val[:, 0].astype(pool.dtype))
+    return flat.reshape(pool.shape)
+
+
+def _cache_write_paged(cache, name, val, pos, block_table):
+    """Paged counterpart of ``_cache_write`` (decode writes only; prefill
+    fills a dense B=1 cache that the engine scatters block-wise).  The
+    int8 quantization is the same arithmetic as the dense path, so codes
+    and scales land bit-identical."""
+    arr = cache[name]
+    if arr.dtype == jnp.int8:
+        s = jnp.max(jnp.abs(val.astype(jnp.float32)), axis=-1) / 127.0 + 1e-9
+        q = jnp.clip(jnp.round(val.astype(jnp.float32) / s[..., None]),
+                     -127, 127).astype(jnp.int8)
+        return {name: _paged_write(arr, q, pos, block_table),
+                f"{name}_scale": _paged_write(
+                    cache[f"{name}_scale"], s.astype(jnp.float32), pos,
+                    block_table)}
+    return {name: _paged_write(arr, val, pos, block_table)}
+
+
+def _cache_read_paged(cache, name, dtype, block_table):
+    """Gather a slot-major dense view (B, blocks_per_seq*block_size, ...)
+    out of the pool; dequantization matches ``_cache_read`` elementwise."""
+    arr = cache[name]
+    g = arr[block_table]                       # (B, nblk, bs, ...)
+    g = g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+    if arr.dtype == jnp.int8:
+        sc = cache[f"{name}_scale"][block_table]
+        sc = sc.reshape((sc.shape[0], sc.shape[1] * sc.shape[2])
+                        + sc.shape[3:])
+        return (g.astype(jnp.float32) * sc[..., None]).astype(dtype)
+    return g
+
+
 def attn_block(x, p, *, cfg, ctx: ShardCtx, window, cache=None, pos=None,
-               dtype=jnp.bfloat16, dima=None):
+               dtype=jnp.bfloat16, dima=None, block_table=None):
     """Full attention sub-layer (projections + RoPE + attention).
 
-    cache: None (train) or {"k","v"[, "k_scale","v_scale"]}.
+    cache: None (train) or {"k","v"[, "k_scale","v_scale"]} — dense
+    (B, S, ...) leaves, or pooled (n_blocks, block_size, ...) leaves
+    when ``block_table`` (B, blocks_per_seq) is given (paged decode).
     Returns (y, new_cache).
     """
     B, S, d = x.shape
@@ -221,11 +277,18 @@ def attn_block(x, p, *, cfg, ctx: ShardCtx, window, cache=None, pos=None,
         rope_kw = dict(fraction=cfg.rope_fraction, theta=cfg.rope_theta)
         q = apply_rope(q, positions, **rope_kw)
         k = apply_rope(k, positions, **rope_kw)
-        new_cache = {**_cache_write(cache, "k", k, pos, "pos"),
-                     **_cache_write(cache, "v", v, pos, "pos")}
-        new_cache = {kk: _csc2(vv, ctx) for kk, vv in new_cache.items()}
-        kc = _cache_read(new_cache, "k", dtype)
-        vc = _cache_read(new_cache, "v", dtype)
+        if block_table is not None:   # paged: pool scatter + table gather
+            new_cache = {
+                **_cache_write_paged(cache, "k", k, pos, block_table),
+                **_cache_write_paged(cache, "v", v, pos, block_table)}
+            kc = _cache_read_paged(new_cache, "k", dtype, block_table)
+            vc = _cache_read_paged(new_cache, "v", dtype, block_table)
+        else:
+            new_cache = {**_cache_write(cache, "k", k, pos, "pos"),
+                         **_cache_write(cache, "v", v, pos, "pos")}
+            new_cache = {kk: _csc2(vv, ctx) for kk, vv in new_cache.items()}
+            kc = _cache_read(new_cache, "k", dtype)
+            vc = _cache_read(new_cache, "v", dtype)
         o = decode_attention(q, kc, vc, cfg=cfg, ctx=ctx, pos=pos, window=window)
 
     y = matmul(o.reshape(B, S, H * dh), p["wo"], dtype, dima, name="wo")
@@ -247,5 +310,18 @@ def init_cache_attn(cfg, batch, max_len, dtype=jnp.bfloat16):
     c = {"k": z, "v": z}
     if dtype == jnp.int8:
         s = jnp.zeros((batch, max_len, KV), jnp.float32)
+        c.update({"k_scale": s, "v_scale": s})
+    return c
+
+
+def init_cache_attn_paged(cfg, n_blocks, block_size, dtype=jnp.bfloat16):
+    """Pooled KV cache: ``n_blocks`` blocks of ``block_size`` tokens
+    shared by every slot (block 0 reserved as scratch — see
+    ``inference/paged_kv.py``)."""
+    KV, dh = cfg.n_kv_heads, cfg.head_dim
+    z = jnp.zeros((n_blocks, block_size, KV, dh), dtype)
+    c = {"k": z, "v": z}
+    if dtype == jnp.int8:
+        s = jnp.zeros((n_blocks, block_size, KV), jnp.float32)
         c.update({"k_scale": s, "v_scale": s})
     return c

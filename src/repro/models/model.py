@@ -61,6 +61,14 @@ class LM:
         kv_dtype = jnp.int8 if self.run.kv_dtype == "int8" else self.dtype
         return transformer.init_cache(self.cfg, batch, max_len, kv_dtype)
 
+    def init_paged_cache(self, n_blocks, block_size):
+        """Pooled KV cache for paged decode: per layer, ``n_blocks``
+        blocks of ``block_size`` tokens shared by every slot through a
+        block table (uniform attention family only)."""
+        kv_dtype = jnp.int8 if self.run.kv_dtype == "int8" else self.dtype
+        return transformer.init_cache_paged(self.cfg, n_blocks, block_size,
+                                            kv_dtype)
+
     def prefill(self, params, cache, tokens=None, embeds=None, dima=None):
         """Fills cache rows [0, S); returns (last-token logits, cache)."""
         logits, new_cache, _ = transformer.apply(
@@ -70,14 +78,18 @@ class LM:
         return logits[:, -1], new_cache
 
     def decode_step(self, params, cache, pos, tokens=None, embeds=None,
-                    dima=None):
+                    dima=None, block_table=None):
         """One token: tokens (B,1) (or embeds (B,1,d)); pos = write index
         of the new token — a scalar int32 shared by every row (static
         batching) or a (B,) vector of per-row positions (continuous
         batching: each slot advances independently; the KV-cache write is
-        a vmapped per-row scatter). Returns (logits (B,V), cache)."""
+        a vmapped per-row scatter). With ``block_table`` (B, blocks_per_
+        seq), ``cache`` is the pooled paged layout (init_paged_cache) and
+        reads/writes gather/scatter through the table instead.
+        Returns (logits (B,V), cache)."""
         logits, new_cache, _ = transformer.apply(
             params, self.cfg, self.ctx, tokens=tokens, embeds=embeds,
             cache=cache, pos=pos, mode="decode",
-            remat_policy=self.run.remat_policy, dtype=self.dtype, dima=dima)
+            remat_policy=self.run.remat_policy, dtype=self.dtype, dima=dima,
+            block_table=block_table)
         return logits[:, -1], new_cache

@@ -138,6 +138,22 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     return caches
 
 
+def init_cache_paged(cfg: ArchConfig, n_blocks: int, block_size: int,
+                     dtype=jnp.bfloat16):
+    """Pooled KV cache for the paged decode path: per layer, a global
+    pool of ``n_blocks`` × ``block_size``-token blocks indexed through a
+    per-slot block table (``inference/paged_kv.py``).  Uniform family
+    only — recurrent caches (xlstm/griffin) are per-slot state, not
+    pageable KV."""
+    if structure(cfg) != "uniform":
+        raise NotImplementedError(
+            f"paged KV targets the uniform decoder family; {cfg.name} "
+            f"has structure {structure(cfg)!r}")
+    one = attn_mod.init_cache_attn_paged(cfg, n_blocks, block_size, dtype)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)
+
+
 # ---------------------------------------------------------------------------
 # forward
 # ---------------------------------------------------------------------------
@@ -151,12 +167,16 @@ def _window_array(cfg):
 
 def apply(params, cfg: ArchConfig, ctx: ShardCtx, *, tokens=None, embeds=None,
           cache=None, pos=None, mode="train", remat_policy="nothing",
-          dtype=jnp.bfloat16, dima=None):
+          dtype=jnp.bfloat16, dima=None, block_table=None):
     """Returns (logits_f32, new_cache, aux_loss)."""
     struct = structure(cfg)
     if getattr(dima, "per_layer_xs", None) is not None and struct != "uniform":
         raise NotImplementedError(
             "analog_lm routing targets the uniform decoder family; "
+            f"{cfg.name} has structure {struct!r}")
+    if block_table is not None and struct != "uniform":
+        raise NotImplementedError(
+            "paged KV decode targets the uniform decoder family; "
             f"{cfg.name} has structure {struct!r}")
     if cfg.external_embed:
         assert embeds is not None, f"{cfg.name} takes frontend embeddings"
@@ -168,7 +188,8 @@ def apply(params, cfg: ArchConfig, ctx: ShardCtx, *, tokens=None, embeds=None,
 
     if struct == "uniform":
         x, new_cache, aux = _apply_uniform(
-            params, cfg, ctx, x, cache, pos, mode, remat_policy, dtype, dima)
+            params, cfg, ctx, x, cache, pos, mode, remat_policy, dtype, dima,
+            block_table)
     elif struct == "xlstm":
         x, new_cache = _apply_xlstm(
             params, cfg, ctx, x, cache, mode, remat_policy, dtype, dima)
@@ -182,7 +203,7 @@ def apply(params, cfg: ArchConfig, ctx: ShardCtx, *, tokens=None, embeds=None,
 
 
 def uniform_layer(x, aux, lp, window, cache_l, *, cfg, ctx, pos, dtype,
-                  dima=None):
+                  dima=None, block_table=None):
     """One (attn|local)+FFN/MoE block of the uniform family.
 
     Module-level so the scan body stays a thin per-layer binding wrapper
@@ -192,7 +213,8 @@ def uniform_layer(x, aux, lp, window, cache_l, *, cfg, ctx, pos, dtype,
     h = rms_norm(x, lp["norm1"], cfg.norm_eps)
     h, new_c = attn_mod.attn_block(
         h, lp["attn"], cfg=cfg, ctx=ctx, window=window,
-        cache=cache_l, pos=pos, dtype=dtype, dima=dima)
+        cache=cache_l, pos=pos, dtype=dtype, dima=dima,
+        block_table=block_table)
     x = x + h
     h = rms_norm(x, lp["norm2"], cfg.norm_eps)
     if cfg.n_experts > 0:
@@ -205,11 +227,13 @@ def uniform_layer(x, aux, lp, window, cache_l, *, cfg, ctx, pos, dtype,
 
 
 def _apply_uniform(params, cfg, ctx, x, cache, pos, mode, remat_policy,
-                   dtype, dima):
+                   dtype, dima, block_table=None):
     windows = _window_array(cfg)
     # analog_lm routers carry stacked per-layer state (stored rows,
     # v_range, trim, hatch flags, keys) that rides the scan as extra xs;
     # bind() specializes the router to the layer slice inside the body.
+    # The paged block table is slot-major and layer-invariant, so it is
+    # closed over rather than scanned.
     lxs = getattr(dima, "per_layer_xs", None)
 
     def layer(carry, xs):
@@ -222,7 +246,7 @@ def _apply_uniform(params, cfg, ctx, x, cache, pos, mode, remat_policy,
             dima_l = dima
         x, aux, new_c = uniform_layer(x, aux, lp, window, cache_l, cfg=cfg,
                                       ctx=ctx, pos=pos, dtype=dtype,
-                                      dima=dima_l)
+                                      dima=dima_l, block_table=block_table)
         return (x, aux), new_c
 
     if mode == "train":

@@ -1,0 +1,279 @@
+"""Paged KV cache: block pool accounting, prefix reuse + copy-on-write,
+pool-exhaustion queueing, and bitwise token parity with the dense
+layout (the one-release oracle).
+
+Parity rests on two exact-arithmetic facts: (1) the gathered per-slot
+view of the pool is bit-identical to the dense cache at every position
+a slot wrote, and (2) every position it did NOT write is masked to
+NEG_INF before the softmax, where ``exp`` underflows to exactly 0.0 —
+so garbage rows (stale blocks, the scratch block) contribute exactly
+nothing and the logits match bit for bit.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import RunConfig, get_arch, reduced
+from repro.inference import BlockPool, Request, ServeEngine
+from repro.models import LM
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(reduced(get_arch("gemma3-1b")), dtype="float32")
+    model = LM(cfg, RunConfig())
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(cfg, n, seed=0, lo=3, hi=14, max_new=(2, 7), dup_every=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        if dup_every and reqs and i % dup_every == 0:
+            p = reqs[int(rng.integers(0, len(reqs)))].prompt.copy()
+        else:
+            p = rng.integers(0, cfg.vocab_size,
+                             rng.integers(lo, hi)).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=p, max_new=int(
+            rng.integers(*max_new))))
+    return reqs
+
+
+def _drain(model, params, reqs, **kw):
+    eng = ServeEngine(model, params, **kw)
+    for r in reqs:
+        eng.submit(Request(rid=r.rid, prompt=r.prompt.copy(),
+                           max_new=r.max_new))
+    done = eng.run()
+    return eng, {r.rid: list(r.out) for r in done}
+
+
+# ---------------------------------------------------------------------------
+# BlockPool unit behavior (host-side, no jax)
+# ---------------------------------------------------------------------------
+
+def test_pool_alloc_release_and_idle_lru():
+    pool = BlockPool(6, 16)                  # 5 usable + scratch
+    assert pool.usable == 5 and pool.free == 5
+    a, b = pool.alloc(2)
+    assert 0 not in (a, b) and pool.free == 3 and pool.live == 2
+    pool.register(("tail", 8, b"x"), a)
+    pool.release(a)                          # registered -> parks idle
+    pool.release(b)                          # unregistered -> straight free
+    assert pool.idle == 1 and pool.free == 5 and pool.live == 0
+    assert pool.lookup(("tail", 8, b"x")) == a
+    # share revives the idle block, keys intact
+    assert pool.share(a) == a and pool.idle == 0 and pool.refcount(a) == 1
+    pool.release(a)
+    # pressure reclaims idle blocks oldest-first and purges their keys
+    got = pool.alloc(5)
+    assert a in got and pool.lookup(("tail", 8, b"x")) is None
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.alloc(1)
+
+
+def test_pool_refuses_scratch_and_tiny():
+    with pytest.raises(ValueError):
+        BlockPool(1, 16)
+    pool = BlockPool(3, 16)
+    assert 0 not in pool.alloc(2)            # block 0 never handed out
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity with the dense oracle
+# ---------------------------------------------------------------------------
+
+def test_paged_matches_dense_greedy(setup):
+    """Same ragged trace through both layouts: token-identical under
+    greedy decode (bitwise logits argument above)."""
+    cfg, model, params = setup
+    reqs = _requests(cfg, 8, seed=3, dup_every=3)
+    _, dense = _drain(model, params, reqs, bucket=8, max_batch=4,
+                      max_len=64, kv="dense")
+    eng, paged = _drain(model, params, reqs, bucket=8, max_batch=4,
+                        max_len=64, kv="paged")
+    assert dense == paged
+    assert eng.jit_traces["decode"] == 1     # shape-stable block tables
+
+
+def test_paged_matches_dense_sampled(setup):
+    """Sampling parity: per-slot fold_in streams depend only on (slot,
+    position), and both engines admit FIFO into the lowest free slot —
+    identical logits + identical streams = identical samples."""
+    cfg, model, params = setup
+    key = jax.random.PRNGKey(11)
+    reqs = _requests(cfg, 6, seed=5, dup_every=3)
+    kw = dict(bucket=8, max_batch=3, max_len=64, temperature=0.8, top_k=5,
+              sample_key=key)
+    _, dense = _drain(model, params, reqs, kv="dense", **kw)
+    _, paged = _drain(model, params, reqs, kv="paged", **kw)
+    assert dense == paged
+
+
+def test_paged_matches_dense_int8_kv(setup):
+    """int8 KV path: quantization arithmetic is shared between layouts,
+    so codes and scales (and therefore logits) stay bit-identical."""
+    cfg, model, _ = setup
+    model8 = LM(cfg, RunConfig(kv_dtype="int8"))
+    params = model8.init(jax.random.PRNGKey(0))
+    reqs = _requests(cfg, 5, seed=7)
+    _, dense = _drain(model8, params, reqs, bucket=8, max_batch=3,
+                      max_len=64, kv="dense")
+    _, paged = _drain(model8, params, reqs, bucket=8, max_batch=3,
+                      max_len=64, kv="paged")
+    assert dense == paged
+
+
+# ---------------------------------------------------------------------------
+# prefix reuse + copy-on-write
+# ---------------------------------------------------------------------------
+
+def test_prefix_reuse_shares_physical_pages(setup):
+    """Two live requests with the same prompt map the same physical tail
+    page (refcount 2) and the duplicate skips its prefill; the first
+    decode write triggers exactly one copy-on-write, after which the
+    tables diverge — and the tokens still match the dense oracle."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(17)
+    p = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    reqs = [Request(rid=i, prompt=p.copy(), max_new=5) for i in range(2)]
+
+    eng = ServeEngine(model, params, bucket=8, max_batch=2, max_len=32,
+                      kv="paged")
+    for r in reqs:
+        eng.submit(Request(rid=r.rid, prompt=r.prompt.copy(), max_new=5))
+    eng._ensure_slots()
+    assert eng._admit() == []                # both seated, none finished
+    bid = int(eng._tables[0, 0])
+    assert bid != 0 and bid == int(eng._tables[1, 0])   # shared page
+    assert eng._pool.refcount(bid) == 2
+    assert eng.stats["prefill_skips"] == 1   # exact-duplicate memo hit
+    assert eng.jit_traces["prefill"] == 1    # one compile, one dispatch
+
+    done = {}
+    while eng.busy:
+        for r in eng.step():
+            done[r.rid] = list(r.out)
+    assert eng.stats["cow_copies"] == 1      # writer copied, reader kept
+    assert int(eng._tables[0, 0]) == 0       # drained tables zeroed
+
+    _, dense = _drain(model, params, reqs, bucket=8, max_batch=2,
+                      max_len=32, kv="dense")
+    assert done == dense
+
+
+def test_prefix_reuse_across_request_lifetimes(setup):
+    """A recurring prompt hits the registry AFTER its original request
+    finished: zero-ref pages park on the idle LRU instead of being
+    freed, so system-prompt traffic keeps its pages warm."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(19)
+    p = rng.integers(0, cfg.vocab_size, 20).astype(np.int32)
+    eng = ServeEngine(model, params, bucket=8, max_batch=2, max_len=64,
+                      kv="paged")
+    eng.submit(Request(rid=0, prompt=p.copy(), max_new=3))
+    eng.run()                                # original fully drained
+    assert eng._pool.live == 0 and eng._pool.idle > 0
+    eng.submit(Request(rid=1, prompt=p.copy(), max_new=3))
+    done = {r.rid: list(r.out) for r in eng.run()}
+    assert eng.stats["prefill_skips"] == 1
+    assert eng.stats["prefix_hits"] >= 2     # full block(s) + tail revived
+    assert eng.jit_traces["prefill"] == 1    # second admission: no dispatch
+    _, dense = _drain(model, params,
+                      [Request(rid=1, prompt=p.copy(), max_new=3)],
+                      bucket=8, max_batch=2, max_len=64, kv="dense")
+    assert done[1] == dense[1]
+
+
+def test_interleaved_admission_with_shared_prefixes(setup):
+    """Duplicates submitted mid-flight (slots live, CoW pending) stay
+    token-identical to the dense oracle — the registry must only ever
+    serve frozen rows below the tail fill."""
+    cfg, model, params = setup
+    first = _requests(cfg, 3, seed=23, max_new=(4, 8))
+    late = [Request(rid=100 + i, prompt=first[i].prompt.copy(),
+                    max_new=4) for i in range(3)]
+    eng = ServeEngine(model, params, bucket=8, max_batch=2, max_len=64,
+                      kv="paged")
+    for r in first:
+        eng.submit(Request(rid=r.rid, prompt=r.prompt.copy(),
+                           max_new=r.max_new))
+    done, ticks = {}, 0
+    while eng.busy:
+        for r in eng.step():
+            done[r.rid] = list(r.out)
+        ticks += 1
+        if ticks == 2:
+            for r in late:
+                eng.submit(Request(rid=r.rid, prompt=r.prompt.copy(),
+                                   max_new=r.max_new))
+    assert len(done) == 6
+    assert eng.stats["prefix_hits"] > 0
+    _, dense = _drain(model, params, first + late, bucket=8, max_batch=2,
+                      max_len=64, kv="dense")
+    assert done == dense
+
+
+# ---------------------------------------------------------------------------
+# memory-bound admission
+# ---------------------------------------------------------------------------
+
+def test_pool_exhaustion_queues_not_drops(setup):
+    """kv_blocks too small for all requests at once: admission waits at
+    the head of the FIFO (kv_waits > 0), every request still completes,
+    and tokens match the dense oracle."""
+    cfg, model, params = setup
+    reqs = _requests(cfg, 6, seed=29, lo=10, hi=13, max_new=(6, 10))
+    eng, paged = _drain(model, params, reqs, bucket=8, max_batch=4,
+                        max_len=32, kv="paged", kv_blocks=3)
+    assert len(paged) == 6                   # queued, never dropped
+    assert eng.stats["kv_waits"] > 0
+    assert eng._pool.live == 0               # fully drained accounting
+    assert eng._pool.free == eng._pool.usable
+    assert not eng._reserve
+    _, dense = _drain(model, params, reqs, bucket=8, max_batch=4,
+                      max_len=32, kv="dense")
+    assert paged == dense
+
+
+def test_impossible_request_rejected(setup):
+    """A request that can never fit the pool (even with every block
+    free) fails loudly instead of deadlocking the queue."""
+    cfg, model, params = setup
+    eng = ServeEngine(model, params, bucket=8, max_batch=2, max_len=64,
+                      kv="paged", kv_blocks=2)
+    eng.submit(Request(rid=0, prompt=np.arange(8, dtype=np.int32),
+                       max_new=40))          # needs 3+ blocks, pool has 2
+    with pytest.raises(ValueError, match="kv_blocks"):
+        eng.run()
+
+
+def test_paged_rejected_for_recurrent_family(setup):
+    """Recurrent caches (griffin/xlstm) are per-slot state, not pageable
+    KV: kv='paged' must fail loudly and kv='auto' must fall back."""
+    cfg = dataclasses.replace(reduced(get_arch("recurrentgemma-2b")),
+                              dtype="float32")
+    model = LM(cfg, RunConfig())
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(model, None, kv="paged")
+    assert ServeEngine(model, None, kv="auto").kv == "dense"
+    _, m, p = setup
+    assert ServeEngine(m, p, kv="auto").kv == "paged"
+
+
+def test_decode_trace_count_stable_under_churn(setup):
+    """Slots churn, tables mutate, admissions interleave — the decode
+    (and CoW/insert) jits must each compile exactly once; a retrace
+    means a shape leak (the dispatch-count analogue of the dima
+    count_dispatches CI guards)."""
+    cfg, model, params = setup
+    reqs = _requests(cfg, 10, seed=31, dup_every=2, max_new=(1, 8))
+    eng, _ = _drain(model, params, reqs, bucket=8, max_batch=3, max_len=64,
+                    kv="paged")
+    assert eng.stats["steps"] > 3
+    assert eng.jit_traces["decode"] == 1
+    assert eng.jit_traces["insert"] == 1
+    assert eng.jit_traces["cow"] <= 1
