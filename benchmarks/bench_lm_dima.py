@@ -101,6 +101,48 @@ def lm_energy_accuracy_sweep(arch="gemma3-1b", steps=150, seed=0, *,
     return {"train_loss": round(base_loss, 4), "sweep": rows}
 
 
-if __name__ == "__main__":
+def raised_swing_study(arch="gemma3-1b", steps=150, seed=0, *,
+                       backend="multibank", n_eval=1, eval_rows=8):
+    """The raised-swing operating-point study (ROADMAP follow-up from
+    the analog-LM PR): the same small-slice noisy eval at ΔV×{1, 2, 4},
+    so ``bench_lm_analog.OP_DELTA_V = 4`` is justified by data rather
+    than asserted — the sweep shows where the noisy eval loss closes on
+    the fp32 row and what the swing costs in pJ/token.  Merged into
+    BENCH_dima_api.json under ``analog_lm_dv_study``."""
+    return lm_energy_accuracy_sweep(arch, steps, seed, backend=backend,
+                                    n_eval=n_eval, eval_rows=eval_rows,
+                                    dv_scales=(1.0, 2.0, 4.0))
+
+
+def main(argv=None):
+    import argparse
     import json
-    print(json.dumps(lm_energy_accuracy_sweep(), indent=1))
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--study", default="raised-swing",
+                    choices=["raised-swing", "fig5"],
+                    help="raised-swing: ΔV×{1,2,4} (analog_lm_dv_study "
+                         "key); fig5: the descending ΔV knee sweep "
+                         "(printed only)")
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short training run; write the .smoke.json "
+                         "side file")
+    args = ap.parse_args(argv)
+
+    steps = 40 if args.smoke else args.steps
+    if args.study == "fig5":
+        rec = lm_energy_accuracy_sweep(steps=steps, seed=args.seed)
+        print(json.dumps(rec, indent=1))
+        return rec
+    rec = raised_swing_study(steps=steps, seed=args.seed)
+    from benchmarks.bench_lm_analog import write_row
+    path = write_row(rec, smoke=args.smoke, key="analog_lm_dv_study")
+    print(json.dumps(rec, indent=1))
+    print(f"[bench_lm_dima] raised-swing study -> {path}")
+    return rec
+
+
+if __name__ == "__main__":
+    main()

@@ -86,13 +86,49 @@ class AnalogRouter:
             slots[name] = {"stored": sp.stored,
                            "v_range": store.v_range[name],
                            "coef": store.coef[name]}
-        xs = {"slots": slots, "flag": store.analog}
+        self._key = key
+        self._rebuild_xs()
+
+    def _rebuild_xs(self):
+        """(Re)assemble the per-layer scan xs from the current store —
+        the single place the layer state is packed, so ``refresh`` after
+        a recalibration cannot drift from the constructor."""
+        slots = {}
+        for name, sp in self.plans.items():
+            slots[name] = {"stored": sp.stored,
+                           "v_range": self.store.v_range[name],
+                           "coef": self.store.coef[name]}
+        xs = {"slots": slots, "flag": self.store.analog}
         if self.noisy:
-            base = key if key is not None else jax.random.PRNGKey(0)
+            base = (self._key if self._key is not None
+                    else jax.random.PRNGKey(0))
             xs["key"] = jax.vmap(
                 lambda i: jax.random.fold_in(base, i))(
-                    jnp.arange(cfg.n_layers))
+                    jnp.arange(self.cfg.n_layers))
         self.per_layer_xs = xs
+
+    # -- fleet maintenance --------------------------------------------------
+
+    def refresh(self, store: CalibrationStore) -> None:
+        """Swap in a re-fit CalibrationStore (per-layer ``v_range`` +
+        affine trim refresh — the drift countermeasure) and repack the
+        scan xs.  The owner of any jit that closed over
+        ``per_layer_xs``/this router must rebuild it afterwards
+        (ServeEngine.recalibrate does)."""
+        self.store = store
+        self.lut = store.lut
+        self._rebuild_xs()
+
+    def advance_epoch(self, key=None) -> int:
+        """Advance the executing substrate's drift/fault epoch (a no-op
+        returning 0 on substrates without a drift model)."""
+        if hasattr(self.backend, "advance_epoch"):
+            return self.backend.advance_epoch(key)
+        return 0
+
+    @property
+    def epoch(self) -> int:
+        return getattr(self.backend, "epoch", 0)
 
     def bind(self, lstate, pos=None) -> "_BoundRouter":
         """Specialize to one layer's xs slice (called in the scan body).

@@ -52,8 +52,9 @@ import numpy as np
 
 from repro.core import adc as adc_mod
 from repro.core import energy as energy_mod
+from repro.core import noise as noise_mod
 from repro.core import pipeline as pl
-from repro.core.params import DimaParams
+from repro.core.params import BankVariation, DimaParams
 from repro.core.pipeline import DimaOut
 
 MODES = ("dp", "md")
@@ -533,12 +534,49 @@ class MultiBankBackend(DimaBackend):
     the row count to divide ``n_banks`` (no ragged last bank across
     devices) and always runs the reference pipeline per shard
     (Pallas-in-shard_map is a TPU-only upgrade).
+
+    Fleet robustness (all off by default — a default-constructed backend
+    is bitwise-identical to the seed):
+
+    * ``variation`` (a ``params.BankVariation``) + ``variation_key``
+      give every *physical* bank its own silicon (chip-to-chip sigma
+      scaling, ``noise.sample_bank_chips``) and/or a temporal drift walk
+      advanced by :meth:`advance_epoch` (``noise.step_drift`` folded
+      into the bank chip records).
+    * ``faults`` (a ``distributed.fault_tolerance.FaultSchedule``)
+      injects dead / stuck / drifted banks over epoch windows; the
+      backend's ``epoch`` (ticked by ``advance_epoch``) is the schedule
+      clock.
+    * ``redundancy=R`` stores each logical bank's rows on ``R``
+      physical banks (replica-major: physical bank ``r·n_banks + b`` is
+      replica ``r`` of logical bank ``b``) and the digital merge takes
+      the per-element median code over replicas — an ECC-style vote
+      that masks a dead or stuck replica outright.  Energy honesty:
+      cycle/conversion counts scale by ``R``.
+    * :meth:`recalibrate_banks` measures each physical bank's affine
+      voltage transfer against the clean chip and reprograms the bank's
+      ADC window along it (the drift-aware per-bank ``v_range``
+      refresh) — the digital countermeasure that pulls a drifted bank
+      back to the clean operating point; a dead/stuck bank yields
+      degenerate probes and keeps the identity transfer (voting handles
+      it instead).
+
+    When any of these is active, matvec/matmat run a per-physical-bank
+    loop of reference-pipeline dispatches (the robust path needs
+    per-bank chip records, which the fused/mesh/pallas paths do not
+    thread); with everything at defaults the fused single-dispatch
+    paths are untouched.  At ``redundancy=1`` with no variation, no
+    faults and no trim, the robust path is bit-for-bit the existing
+    ``fused=False`` loop (same ``fold_in(key, b)`` streams) — the
+    parity the test suite asserts.
     """
 
     executes_multibank = True
 
     def __init__(self, p: DimaParams = None, chip=None, inner="reference",
-                 n_banks: int = None, mesh=None, fused: bool = True):
+                 n_banks: int = None, mesh=None, fused: bool = True,
+                 variation: BankVariation = None, variation_key=None,
+                 faults=None, redundancy: int = 1):
         super().__init__(p, chip)
         self.n_banks = (self.p.n_banks_multibank if n_banks is None
                         else int(n_banks))
@@ -559,8 +597,49 @@ class MultiBankBackend(DimaBackend):
                 "upgrade (ROADMAP)")
         self.fused = bool(fused)
         self._jit = {}
+        # -- fleet robustness state (inert at defaults) ---------------------
+        self.variation = variation
+        self.variation_key = variation_key
+        self.faults = faults
+        self.redundancy = int(redundancy)
+        if self.redundancy < 1:
+            raise ValueError(f"redundancy must be >= 1; got "
+                             f"{self.redundancy}")
+        self.epoch = 0
+        self._drift = None        # noise.DriftState over physical banks
+        self._bank_chips = None   # stacked per-physical-bank chip records
+        self._trim = None         # (a, c) per-physical-bank affine code trim
+        if variation is not None and variation.varies and variation_key is \
+                None:
+            raise ValueError("BankVariation with sigma_scale != 0 needs a "
+                             "variation_key to draw the bank population")
+        if self.robust:
+            if self.mesh is not None:
+                raise ValueError("variation/faults/redundancy run on the "
+                                 "host per-bank path; mesh fan-out does not "
+                                 "thread per-bank chip records — use "
+                                 "mesh=None")
+            if not isinstance(self.inner, ReferenceBackend):
+                raise ValueError(
+                    f"the robust path runs the reference pipeline per "
+                    f"physical bank; inner={self.inner.name!r} is only "
+                    "available with robustness off")
+
+    @property
+    def robust(self) -> bool:
+        """True when any fleet-robustness feature routes matvec/matmat
+        to the per-physical-bank path."""
+        return (self.redundancy > 1 or bool(self.faults)
+                or (self.variation is not None and self.variation.enabled)
+                or self._trim is not None)
+
+    @property
+    def n_physical(self) -> int:
+        return self.n_banks * self.redundancy
 
     def ideal(self) -> "MultiBankBackend":
+        """The clean substrate range calibration runs on: no mismatch,
+        no variation, no faults, no redundancy."""
         return MultiBankBackend(self.p, None, inner=self.inner.ideal(),
                                 n_banks=self.n_banks, mesh=self.mesh,
                                 fused=self.fused)
@@ -609,6 +688,9 @@ class MultiBankBackend(DimaBackend):
             raise ValueError(f"matvec wants stored (m, n); got "
                              f"{stored.shape}")
         _check_op_dims(stored.shape[-1], self.p)
+        if self.robust:
+            return self._robust_run("matvec", stored, jnp.asarray(query),
+                                    mode, key, v_range)
         if self.mesh is not None:
             return self._matvec_mesh(stored, jnp.asarray(query), mode, key,
                                      v_range)
@@ -632,6 +714,9 @@ class MultiBankBackend(DimaBackend):
             raise ValueError(f"matmat wants stored (m, n) × queries "
                              f"(b, n); got {stored.shape} × {queries.shape}")
         _check_op_dims(stored.shape[-1], self.p)
+        if self.robust:
+            return self._robust_run("matmat", stored, queries, mode, key,
+                                    v_range)
         if self.mesh is not None:
             return self._matmat_mesh(stored, queries, mode, key, v_range)
         if self.fused and isinstance(self.inner, ReferenceBackend):
@@ -645,6 +730,181 @@ class MultiBankBackend(DimaBackend):
                                key=self._bank_key(key, b), v_range=v_range)
              for b, (a, z) in enumerate(self.bank_slices(stored.shape[0]))],
             axis=1)
+
+    # -- robust path: per-physical-bank loop with variation/drift/faults ----
+
+    def advance_epoch(self, key=None) -> int:
+        """One epoch tick (the owner defines the cadence — wall clock,
+        tokens, requests): advances the fault-schedule clock and, when
+        the variation model drifts, steps every physical bank's
+        gain/offset walk.  Returns the new epoch."""
+        self.epoch += 1
+        if self.variation is not None and self.variation.drifts:
+            if self._drift is None:
+                self._drift = noise_mod.init_drift(self.n_physical)
+            self._drift = noise_mod.step_drift(self._drift, key,
+                                               self.variation)
+        return self.epoch
+
+    @property
+    def drift_state(self):
+        return self._drift
+
+    def _physical_chips(self):
+        """Stacked per-physical-bank chip records with the current drift
+        walk folded in.  With chip-to-chip variation each bank is its
+        own severity-scaled silicon; otherwise every bank carries the
+        backend's base chip (or the ideal record) so drift still has a
+        concrete record to walk."""
+        if self._bank_chips is None:
+            if self.variation is not None and self.variation.varies:
+                self._bank_chips = noise_mod.sample_bank_chips(
+                    self.variation_key, self.p, self.n_physical,
+                    self.variation)
+            else:
+                base = (self.chip if self.chip is not None
+                        else noise_mod.ideal_chip(self.p))
+                self._bank_chips = jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(
+                        x, (self.n_physical,) + x.shape), base)
+        chips = self._bank_chips
+        if self._drift is not None:
+            chips = noise_mod.apply_drift(chips, self._drift)
+        return chips
+
+    def _active_faults(self) -> dict:
+        """{physical bank -> BankFault} in effect this epoch (later
+        schedule entries win on the same bank)."""
+        if not self.faults:
+            return {}
+        return {f.bank: f for f in self.faults.active(self.epoch)}
+
+    def _robust_fn(self, kind, mode):
+        """The per-(op, mode) jitted per-bank core with the chip record
+        as an *operand* — every physical bank reuses the one compiled
+        computation (per row-count shape), just with its own record."""
+        _check_mode(mode)
+        k = ("robust", kind, mode)
+        if k not in self._jit:
+            p = self.p
+            core = _bank_matvec if kind == "matvec" else _bank_matmat
+            self._jit[k] = jax.jit(
+                lambda d_b, q, chip, key, vr: core(d_b, q, p, chip, key,
+                                                   mode, vr))
+        return self._jit[k]
+
+    def _fault_codes(self, f, code, volts):
+        """Post-conversion fault transfer: a dead bank's ADC reads the
+        collapsed rail, a stuck bank pins at one code (the analog node
+        still develops, so volts stay)."""
+        if f.kind == "dead":
+            return jnp.zeros_like(code), jnp.zeros_like(volts)
+        if f.kind == "stuck":
+            return jnp.full_like(code, f.stuck_code), volts
+        return code, volts                     # drifted acts on the chip
+
+    def _replica_codes(self, fn, rows, q, pb, chips, faults, key, v_range):
+        """One physical bank's codes: its own chip record (+ hard-drift
+        fault gain), its own fold_in stream, its recalibrated ADC range,
+        post-conversion fault transfer."""
+        chip_b = jax.tree_util.tree_map(lambda x: x[pb], chips)
+        f = faults.get(pb)
+        if f is not None and f.kind == "drifted":
+            chip_b = dict(chip_b, col_gain=chip_b["col_gain"] * f.gain)
+        vr_b = v_range
+        if self._trim is not None and v_range is not None:
+            # drift-aware per-bank range: the ADC window rides the bank's
+            # measured affine transfer v -> g·v + o, so the code for a
+            # drifted signal equals the clean code for the clean signal
+            g, o = self._trim
+            vr_b = (g[pb] * v_range[0] + o[pb], g[pb] * v_range[1] + o[pb])
+        code, volts = _dispatch(lambda: fn(rows, q, chip_b,
+                                           self._bank_key(key, pb), vr_b))
+        if f is not None:
+            code, volts = self._fault_codes(f, code, volts)
+        return code, volts
+
+    def _robust_run(self, kind, stored, q, mode, key, v_range) -> DimaOut:
+        """matvec/matmat over the physical fleet: every logical bank's
+        rows run on its R replicas, the digital merge is the per-element
+        median code over replicas (R=1: identity — bit-for-bit the
+        ``fused=False`` loop), logical banks concatenate in row order
+        as always."""
+        m = stored.shape[0]
+        R, nb = self.redundancy, self.n_banks
+        chips = self._physical_chips()
+        faults = self._active_faults()
+        fn = self._robust_fn(kind, mode)
+        codes, volts = [], []
+        for b, (s0, s1) in enumerate(self.bank_slices(m)):
+            reps = [self._replica_codes(fn, stored[s0:s1], q, r * nb + b,
+                                        chips, faults, key, v_range)
+                    for r in range(R)]
+            if R == 1:
+                c_b, v_b = reps[0]
+            else:
+                # median over the replica axis: ints stay exact, and with
+                # one dead/stuck replica the two healthy codes outvote it
+                c_b = jnp.sort(jnp.stack([c for c, _ in reps]), 0)[R // 2]
+                v_b = jnp.sort(jnp.stack([v for _, v in reps]), 0)[R // 2]
+            codes.append(c_b)
+            volts.append(v_b)
+        axis = 0 if kind == "matvec" else 1
+        n_ops = m if kind == "matvec" else q.shape[0] * m
+        return DimaOut(jnp.concatenate(codes, axis),
+                       jnp.concatenate(volts, axis),
+                       R * n_ops * pl._cycles_per_op(stored.shape[-1],
+                                                     self.p),
+                       R * n_ops)
+
+    def recalibrate_banks(self, stored, cal_queries, *, mode="dp",
+                          v_range=None):
+        """The digital countermeasure: probe every physical bank with
+        zero-noise calibration queries, fit its affine voltage transfer
+        against the clean chip (``v_drifted ≈ g·v_clean + o``, lstsq),
+        and reprogram the bank's ADC window along that transfer — the
+        drift-aware ``v_range`` refresh.  Because the single-slope code
+        is range-relative, a bank whose signal shrank to ``g·v + o``
+        digitized over ``(g·v_lo + o, g·v_hi + o)`` emits the *clean*
+        code again, even when drift has railed the signal out of the
+        nominal window entirely (a code-domain trim cannot recover
+        that — the information is gone at the ADC).  A dead or stuck
+        bank yields degenerate probes and keeps the identity transfer;
+        redundancy voting is the countermeasure there.  Returns the
+        per-physical-bank (gain, offset) arrays."""
+        stored = jnp.asarray(stored)
+        q = jnp.asarray(cal_queries)
+        R, nb = self.redundancy, self.n_banks
+        chips = self._physical_chips()
+        faults = self._active_faults()
+        fn = self._robust_fn("matmat", mode)
+        trim_prev, self._trim = self._trim, None   # probe raw transfers
+        g_arr = np.ones(self.n_physical)
+        o_arr = np.zeros(self.n_physical)
+        try:
+            for b, (s0, s1) in enumerate(self.bank_slices(stored.shape[0])):
+                _, v_clean = _dispatch(lambda: fn(stored[s0:s1], q, None,
+                                                  None, v_range))
+                x = np.asarray(v_clean, dtype=np.float64).ravel()
+                for r in range(R):
+                    pb = r * nb + b
+                    _, v_bank = self._replica_codes(fn, stored[s0:s1], q, pb,
+                                                    chips, faults, None,
+                                                    v_range)
+                    y = np.asarray(v_bank, dtype=np.float64).ravel()
+                    if y.std() > 1e-9 and x.std() > 1e-9:
+                        coef, *_ = np.linalg.lstsq(
+                            np.stack([x, np.ones_like(x)], 1), y, rcond=None)
+                        g_arr[pb], o_arr[pb] = coef
+        except Exception:
+            self._trim = trim_prev
+            raise
+        self._trim = (jnp.asarray(g_arr, jnp.float32),
+                      jnp.asarray(o_arr, jnp.float32))
+        return self._trim
+
+    def clear_trim(self) -> None:
+        self._trim = None
 
     # -- fused host path (reference inner): one jit dispatch ----------------
 

@@ -4,13 +4,23 @@ Static mismatch is sampled once per simulated chip (`sample_chip`) and
 reused across reads — matching silicon, where column gain / cap-ratio /
 multiplier errors are fixed-pattern.  Dynamic noise (thermal, PWM jitter,
 comparator) is drawn per read from the call's rng key.
+
+Fleet-scale variation (params.BankVariation): a *population* of banks is
+a stacked chip record with a leading bank axis (`sample_bank_chips` —
+bank b's record drawn from ``fold_in(key, b)`` with its sigma budget
+scaled by a per-bank severity), and temporal drift is a per-bank
+gain/offset random walk (`DriftState` + `step_drift`) folded back into
+the chip records (`apply_drift`: gain multiplies ``col_gain``, offset
+adds to ``mult_off``) so the pipeline itself never changes.
 """
 from __future__ import annotations
+
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.params import DimaParams
+from repro.core.params import BankVariation, DimaParams
 
 
 def sample_chip(key, p: DimaParams = DimaParams()):
@@ -39,3 +49,90 @@ def normal(key, shape, sigma):
     if key is None or sigma == 0.0:
         return jnp.zeros(shape)
     return sigma * jax.random.normal(key, shape)
+
+
+# ---------------------------------------------------------------------------
+# fleet-scale variation: per-bank chip populations + temporal drift
+# ---------------------------------------------------------------------------
+
+def scale_chip(chip, s):
+    """Scale a chip record's fixed-pattern *deviations* by ``s`` —
+    equivalent to sampling it with every ``sigma_*`` field multiplied by
+    ``s`` (s=0 → ideal chip, s=1 → unchanged).  ``s`` may carry leading
+    batch dims (broadcast against each field's trailing axes)."""
+    s = jnp.asarray(s)
+    s1 = s[..., None]       # (..., n) fields
+    s2 = s[..., None, None]  # (..., 2, n) fields
+    return {
+        "col_gain": 1.0 + s1 * (chip["col_gain"] - 1.0),
+        "cap_ratio_err": s1 * chip["cap_ratio_err"],
+        "mult_gain": 1.0 + s2 * (chip["mult_gain"] - 1.0),
+        "mult_off": s2 * chip["mult_off"],
+    }
+
+
+def bank_severity(key, n_banks: int, var: BankVariation):
+    """(n_banks,) chip-to-chip severity factors s_b = max(0, 1 + σ·N),
+    bank b's draw from ``fold_in(key, b)`` (vmap-invariant, so a fleet
+    grown from n to n+1 banks keeps its first n severities)."""
+    def one(b):
+        return jax.random.normal(jax.random.fold_in(key, b), ())
+    z = jax.vmap(one)(jnp.arange(n_banks))
+    return jnp.maximum(1.0 + var.sigma_scale * z, 0.0)
+
+
+def sample_bank_chips(key, p: DimaParams = DimaParams(), n_banks: int = 1,
+                      var: BankVariation = None):
+    """A bank population: stacked chip records with a leading
+    ``(n_banks,)`` axis.  Bank ``b`` is its own silicon —
+    ``sample_chip(fold_in(k_chip, b))`` — and, when ``var`` sets a
+    chip-to-chip spread, its fixed-pattern deviations are scaled by the
+    bank's severity factor (``bank_severity``), so the existing
+    ``sigma_*`` budget varies bank to bank exactly as the ISSUE's
+    chip-to-chip model prescribes."""
+    k_sev, k_chip = jax.random.split(key)
+    chips = jax.vmap(
+        lambda b: sample_chip(jax.random.fold_in(k_chip, b), p))(
+        jnp.arange(n_banks))
+    if var is not None and var.varies:
+        chips = scale_chip(chips, bank_severity(k_sev, n_banks, var))
+    return chips
+
+
+class DriftState(NamedTuple):
+    """Per-bank temporal drift: a multiplicative BL-gain walk and an
+    additive analog-offset walk, advanced once per epoch.  A pure pytree
+    so it checkpoints/jits like any other state."""
+    gain: jnp.ndarray       # (n_banks,) multiplicative, starts at 1
+    offset_v: jnp.ndarray   # (n_banks,) additive [V], starts at 0
+    epoch: int = 0
+
+
+def init_drift(n_banks: int) -> DriftState:
+    return DriftState(jnp.ones((n_banks,)), jnp.zeros((n_banks,)), 0)
+
+
+def step_drift(state: DriftState, key, var: BankVariation) -> DriftState:
+    """One drift epoch: deterministic fractional gain loss (PCM-style
+    monotone conductance decay) plus the random-walk steps.  With a
+    ``None`` key only the deterministic decay applies."""
+    kg, ko = (jax.random.split(key) if key is not None else (None, None))
+    nb = state.gain.shape[0]
+    gain = state.gain * (1.0 - var.drift_gain_decay) * (
+        1.0 + normal(kg, (nb,), var.drift_gain_sigma))
+    offset = state.offset_v + normal(ko, (nb,),
+                                     var.drift_offset_sigma_mv * 1e-3)
+    return DriftState(gain, offset, state.epoch + 1)
+
+
+def apply_drift(chips, state: DriftState):
+    """Fold the drift walk into stacked per-bank chip records: the gain
+    walk multiplies the per-column read gain (conductance loss shrinks
+    every developed BL swing), the offset walk shifts the BLP multiplier
+    offset (an additive analog error ahead of the ADC).  The pipeline
+    consumes the result unchanged — drift is just another chip."""
+    return dict(
+        chips,
+        col_gain=chips["col_gain"] * state.gain[:, None],
+        mult_off=chips["mult_off"] + state.offset_v[:, None, None],
+    )

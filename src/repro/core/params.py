@@ -95,3 +95,50 @@ class DimaParams:
         """Fig. 5 sweep: scaling ΔV_BL trades energy against SNR (the
         additive noise floors stay fixed, so lower swing = lower SNR)."""
         return replace(self, delta_v_lsb=delta_v_lsb)
+
+
+@dataclass(frozen=True)
+class BankVariation:
+    """Fleet-scale chip-to-chip variation + temporal drift of a bank
+    population (all off by default — a ``BankVariation()`` is inert and
+    every execution path stays bitwise-identical to the single-chip
+    model).
+
+    The prototype's ≤1 % accuracy claim is one 65 nm die; a fleet runs
+    thousands of banks that are *not* identical and that drift (the PCM
+    in-memory chip, arXiv:2212.02872, shows per-core variation and
+    conductance drift dominate accuracy at scale).  This record is the
+    behavioral model of both effects:
+
+    * **chip-to-chip** (``sigma_scale``): bank ``b`` samples its own
+      fixed-pattern mismatch record with every ``sigma_*`` field scaled
+      by a per-bank severity ``s_b = max(0, 1 + sigma_scale·N(0,1))``
+      drawn from ``fold_in(key, b)`` — some banks are golden, some are
+      outliers (noise.sample_bank_chips).
+    * **temporal drift** (``drift_*``): per epoch (a wall-clock or
+      per-token tick the owner defines), every bank's BL gain takes a
+      multiplicative random-walk step of 1σ ``drift_gain_sigma`` on top
+      of a deterministic fractional loss ``drift_gain_decay`` (the
+      PCM-style monotone conductance decay), and its analog offset
+      takes an additive walk of 1σ ``drift_offset_sigma_mv`` mV
+      (noise.step_drift / apply_drift).
+    """
+    sigma_scale: float = 0.0          # 1σ of per-bank sigma_* scaling
+    drift_gain_sigma: float = 0.0     # per-epoch gain random-walk step (1σ)
+    drift_gain_decay: float = 0.0     # per-epoch deterministic gain loss
+    drift_offset_sigma_mv: float = 0.0  # per-epoch offset walk step [mV]
+
+    @property
+    def varies(self) -> bool:
+        """True when banks differ chip-to-chip."""
+        return self.sigma_scale != 0.0
+
+    @property
+    def drifts(self) -> bool:
+        """True when the drift process has any non-zero step."""
+        return (self.drift_gain_sigma != 0.0 or self.drift_gain_decay != 0.0
+                or self.drift_offset_sigma_mv != 0.0)
+
+    @property
+    def enabled(self) -> bool:
+        return self.varies or self.drifts

@@ -1,12 +1,15 @@
-"""Fault-tolerance & straggler utilities for the train loop.
+"""Fault-tolerance & straggler utilities — train loop AND serving fleet.
 
 What runs on a real pod vs. what is simulated here is stated explicitly:
 
   * **Checkpoint/restart + elastic resharding** — fully implemented
     (checkpoint/checkpointer.py + launch/mesh.make_elastic_mesh); tested
     by saving under one device count and restoring under another.
-  * **Preemption flush** — SIGTERM handler triggers a blocking save of
-    the latest step before exit (implemented below, single-host).
+  * **Preemption flush** — SIGTERM handler triggers a clean drain before
+    exit (implemented below, single-host): the train loop saves the
+    latest step, the serving paths (launch/serve.py, launch/replicas.py
+    workers) finish their in-flight slots and emit final per-request
+    stats instead of dying mid-decode.
   * **Straggler mitigation** — on synchronous TPU pods the per-step
     collective schedule is fixed; mitigation is *detect & replace*:
     StepWatchdog records a running p50 step time and flags steps beyond
@@ -14,13 +17,26 @@ What runs on a real pod vs. what is simulated here is stated explicitly:
     and the job re-enters through the elastic-restore path; here the
     watchdog logs and counts (the decision logic is real, the replacement
     is the cluster manager's job).
+  * **Bank fault injection** — ``BankFault``/``FaultSchedule`` describe
+    stuck/dead/drifted *physical banks* over epoch windows; the
+    multibank backend consumes the schedule (core/api.py robust path)
+    and benchmarks/tests drive it (benchmarks/bench_faults.py).  The
+    faults are models of real silicon failure modes: a dead bank's ADC
+    reads the collapsed rail (code 0), a stuck bank's conversion pins at
+    one code, a drifted bank loses BL gain beyond the fleet's normal
+    drift walk.
+  * **Replica crash handling** — launch/replicas.py polls worker
+    liveness in its dispatch loop and reroutes a crashed replica's
+    claimed + queued work to survivors (``replicas_crashed`` /
+    ``requests_rerouted`` in the fleet report), optionally respawning a
+    replacement.
 """
 from __future__ import annotations
 
 import signal
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, Iterable, List, Optional
 
 
 @dataclass
@@ -43,13 +59,18 @@ class StepWatchdog:
 
 
 class PreemptionGuard:
-    """SIGTERM/SIGINT -> set a flag the train loop checks each step; the
-    loop then saves (blocking) and exits cleanly."""
+    """SIGTERM -> set a flag the owning loop checks each step; the loop
+    then drains (train: blocking save; serving: finish in-flight slots)
+    and exits cleanly.
 
-    def __init__(self):
+    Usable as a context manager: ``__exit__`` restores the previous
+    signal handlers, so a guard scoped to one serving run can't leak its
+    handler into the next (or into pytest's runner)."""
+
+    def __init__(self, signals=(signal.SIGTERM,)):
         self.requested = False
         self._orig = {}
-        for sig in (signal.SIGTERM,):
+        for sig in signals:
             try:
                 self._orig[sig] = signal.signal(sig, self._handler)
             except ValueError:  # non-main thread (tests)
@@ -57,3 +78,93 @@ class PreemptionGuard:
 
     def _handler(self, signum, frame):
         self.requested = True
+
+    def __enter__(self) -> "PreemptionGuard":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.restore()
+        return False
+
+    def restore(self):
+        """Reinstall the handlers that were active before the guard."""
+        for sig, orig in self._orig.items():
+            try:
+                signal.signal(sig, orig)
+            except ValueError:
+                pass
+        self._orig = {}
+
+
+# ---------------------------------------------------------------------------
+# bank fault injection
+# ---------------------------------------------------------------------------
+
+FAULT_KINDS = ("dead", "stuck", "drifted")
+
+
+@dataclass(frozen=True)
+class BankFault:
+    """One physical bank's failure over an epoch window.
+
+    ``bank`` indexes *physical* banks, replica-major: with a redundancy
+    of R over n logical banks, physical bank ``r·n + b`` is replica
+    ``r`` of logical bank ``b`` (core/api.py robust path).
+
+    Kinds:
+      * ``dead``    — the rail collapsed; every ADC conversion on the
+                      bank reads code 0.
+      * ``stuck``   — the conversion pins at ``stuck_code`` regardless
+                      of the stored/query data.
+      * ``drifted`` — the bank's BL gain drops to ``gain`` of nominal
+                      (a hard outlier beyond the fleet's drift walk).
+
+    The window is ``start_epoch <= epoch < end_epoch`` (``end_epoch``
+    None = permanent).
+    """
+    bank: int
+    kind: str = "dead"
+    start_epoch: int = 0
+    end_epoch: Optional[int] = None
+    stuck_code: int = 255
+    gain: float = 0.5
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"fault kind must be one of {FAULT_KINDS}, "
+                             f"got {self.kind!r}")
+        if self.bank < 0:
+            raise ValueError(f"bank must be >= 0, got {self.bank}")
+
+    def active(self, epoch: int) -> bool:
+        return (epoch >= self.start_epoch
+                and (self.end_epoch is None or epoch < self.end_epoch))
+
+
+class FaultSchedule:
+    """An injection plan: which banks fail, how, and when.  Consumed by
+    the multibank backend each call (``active(epoch)``), so a schedule
+    attached once drives the whole accuracy-vs-uptime sweep as the owner
+    advances epochs."""
+
+    def __init__(self, faults: Iterable[BankFault] = ()):
+        self.faults: List[BankFault] = list(faults)
+        for f in self.faults:
+            if not isinstance(f, BankFault):
+                raise TypeError(f"FaultSchedule wants BankFault entries, "
+                                f"got {type(f).__name__}")
+
+    def __bool__(self) -> bool:
+        return bool(self.faults)
+
+    def __len__(self) -> int:
+        return len(self.faults)
+
+    def active(self, epoch: int) -> List[BankFault]:
+        """Faults in effect at ``epoch`` (later entries win on the same
+        bank — the backend applies them in order)."""
+        return [f for f in self.faults if f.active(epoch)]
+
+    def add(self, fault: BankFault) -> "FaultSchedule":
+        self.faults.append(fault)
+        return self

@@ -78,7 +78,9 @@ class ServeEngine:
                  max_len: int = 512, dima=None, backend="reference",
                  temperature: float = 0.0, top_k: int = 0, sample_key=None,
                  kv: str = "auto", block_size: int = 16,
-                 kv_blocks: Optional[int] = None):
+                 kv_blocks: Optional[int] = None,
+                 drift_every: int = 0, drift_key=None,
+                 recalibrate_every: int = 0, recalibrate_fn=None):
         self.model = model
         self.params = params
         self.bucket = bucket
@@ -116,7 +118,23 @@ class ServeEngine:
         self.queue: list[Request] = []
         self.stats = {"requests": 0, "tokens": 0, "steps": 0,
                       "energy_pj": 0.0, "prefix_hits": 0, "prefill_skips": 0,
-                      "cow_copies": 0, "kv_waits": 0}
+                      "cow_copies": 0, "kv_waits": 0,
+                      "drift_epochs": 0, "recalibrations": 0}
+        # fleet maintenance cadence (0 = off, the default — no behavior
+        # change): every ``drift_every`` scheduler ticks the attached
+        # analog substrate's drift walk advances one epoch; every
+        # ``recalibrate_every`` ticks ``recalibrate_fn(engine)`` runs the
+        # owner's refresh (e.g. MultiBankBackend.recalibrate_banks, or
+        # analog_lm calibrate_model + AnalogRouter.refresh).  Both
+        # rebuild the jitted entry points afterwards: the router/chip
+        # state is baked into the decode computation as closure
+        # constants, so a maintenance tick deliberately pays one retrace
+        # (``jit_traces`` counts it — the trace==1 invariant applies to
+        # the default, maintenance-free configuration).
+        self.drift_every = int(drift_every)
+        self._drift_key = drift_key
+        self.recalibrate_every = int(recalibrate_every)
+        self.recalibrate_fn = recalibrate_fn
         #: jit trace counts per entry point — decode/insert/cow must stay
         #: at 1 once warm (shape-stable block tables), asserted by
         #: benchmarks and tests against silent recompiles
@@ -139,6 +157,18 @@ class ServeEngine:
         #: parity tests pin; sampling keeps the separate per-slot pick,
         #: and the dense oracle path stays exactly the pre-paged code
         self._fused_pick = (self.kv == "paged" and self.temperature <= 0.0)
+        self._sample_key = sample_key
+        self._build_entry_points()
+        self._slots_ready = False
+
+    def _build_entry_points(self):
+        """(Re)build the jitted decode/prefill/pick callables.  Called
+        once at construction, and again after every drift epoch /
+        recalibration: the dima router's per-layer arrays and the
+        backend's chip records enter the traced computation as closure
+        constants, so mutating them invalidates the compiled code — the
+        rebuild makes the next call retrace against the fresh state."""
+        model, dima = self.model, self.dima
         if self._fused_pick:
             def _paged_greedy(p, c, t, pos, bt):
                 lg, c2 = model.decode_step(p, c, pos, tokens=t, dima=dima,
@@ -157,7 +187,7 @@ class ServeEngine:
             "prefill", lambda p, c, t: model.prefill(p, c, tokens=t,
                                                      dima=dima))
         if self.temperature > 0.0:
-            key = (sample_key if sample_key is not None
+            key = (self._sample_key if self._sample_key is not None
                    else jax.random.PRNGKey(0))
             temp, tk = self.temperature, self.top_k
 
@@ -171,7 +201,43 @@ class ServeEngine:
                 return jax.vmap(one)(logits, slots, positions)
 
             self._pick = jax.jit(pick)
-        self._slots_ready = False
+
+    # -- fleet maintenance --------------------------------------------------
+
+    def _maintenance_target(self):
+        """The analog substrate whose drift clock this engine owns: the
+        attached dima router when it advances epochs (AnalogRouter over
+        a robust multibank backend), else the engine's costing backend."""
+        if self.dima is not None and hasattr(self.dima, "advance_epoch"):
+            return self.dima
+        return self.backend
+
+    def advance_drift(self) -> None:
+        """One drift epoch on the attached substrate + entry-point
+        rebuild.  Scheduled every ``drift_every`` ticks; callable
+        directly for benchmarks that own the cadence."""
+        target = self._maintenance_target()
+        if hasattr(target, "advance_epoch"):
+            k = (None if self._drift_key is None else jax.random.fold_in(
+                self._drift_key, self.stats["drift_epochs"]))
+            target.advance_epoch(k)
+        self.stats["drift_epochs"] += 1
+        self._build_entry_points()
+
+    def recalibrate(self) -> None:
+        """Run the owner's refresh (``recalibrate_fn(engine)``) and
+        rebuild the entry points against the refreshed calibration."""
+        if self.recalibrate_fn is not None:
+            self.recalibrate_fn(self)
+        self.stats["recalibrations"] += 1
+        self._build_entry_points()
+
+    def _maintenance_tick(self):
+        s = self.stats["steps"]
+        if self.drift_every and s % self.drift_every == 0:
+            self.advance_drift()
+        if self.recalibrate_every and s % self.recalibrate_every == 0:
+            self.recalibrate()
 
     def _jit_counting(self, name, fn):
         """jit ``fn`` with a host-side trace counter: the wrapper body
@@ -244,6 +310,17 @@ class ServeEngine:
         done = []
         while self.busy:
             done.extend(self.step())
+        return done
+
+    def drain(self):
+        """Finish the in-flight slots WITHOUT admitting queued work —
+        the preemption path (launch/serve.py wires this to SIGTERM):
+        every seated request decodes to completion, queued requests stay
+        queued for the caller to report or reroute.  Returns the
+        requests completed during the drain."""
+        done = []
+        while self._slots_ready and any(r is not None for r in self._live()):
+            done.extend(self.step(admit=False))
         return done
 
     # -- slot table ---------------------------------------------------------
@@ -509,14 +586,15 @@ class ServeEngine:
 
     # -- the scheduler tick ---------------------------------------------------
 
-    def step(self) -> list[Request]:
+    def step(self, admit: bool = True) -> list[Request]:
         """One scheduler tick: admit into free slots, then advance every
         live slot one token (free slots ride along parked — dense: their
         writes land in their own unused row; paged: in the scratch block
         their zeroed table maps to).  Returns the requests completed
-        during this tick."""
+        during this tick.  ``admit=False`` (the drain path) advances the
+        seated slots only."""
         self._ensure_slots()
-        finished = self._admit()
+        finished = self._admit() if admit else []
         live = [i for i in range(self.max_batch)
                 if self._slot_req[i] is not None]
         if not live:
@@ -541,6 +619,8 @@ class ServeEngine:
             nxt = self._next_tokens(logits, np.arange(self.max_batch),
                                     self._slot_pos + 1)
         self.stats["steps"] += 1
+        if self.drift_every or self.recalibrate_every:
+            self._maintenance_tick()
         for i in live:
             r = self._slot_req[i]
             r.out.append(int(nxt[i]))

@@ -107,12 +107,28 @@ def _build_engine(spec: dict):
     return model, params, eng
 
 
+def _done_msg(idx: int, r) -> dict:
+    return {"kind": "done", "replica": idx, "rid": r.rid,
+            "out": [int(t) for t in r.out],
+            "submitted_at": r.submitted_at, "done_at": r.done_at,
+            "energy_pj": r.energy_pj}
+
+
 def _worker(idx: int, spec: dict, req_q, res_q, stop_evt):
     """Replica main: warm up, signal ready, then race the shared FIFO —
     pull whatever is visible, advance the engine one lockstep tick,
     repeat.  Runs until the parent sets ``stop_evt`` (it only does so
-    once every request has reported done, so the queue is empty)."""
+    once every request has reported done, so the queue is empty).
+
+    Crash/preemption protocol: every pulled request is announced with a
+    ``claim`` message BEFORE it enters the engine, so the parent knows
+    exactly which rids die with a crashed replica and can reroute them.
+    SIGTERM (a preemption, not a crash — fault_tolerance.PreemptionGuard)
+    drains the seated slots to completion, hands queued-but-unseated
+    rids back via ``requeue`` messages, and still emits the final stats
+    record."""
     os.environ.update(replica_env(idx))
+    from repro.distributed.fault_tolerance import PreemptionGuard
     from repro.inference import Request
 
     _, _, eng = _build_engine(spec)
@@ -123,37 +139,48 @@ def _worker(idx: int, spec: dict, req_q, res_q, stop_evt):
     res_q.put({"kind": "ready", "replica": idx})
 
     busy_s = 0.0
+    preempted = False
     t_ready = time.time()
-    while True:
-        pulled = False
-        # pull only what this replica can seat: hoarding beyond the free
-        # slots would starve an idle peer racing the same FIFO
-        while eng.free_slots > len(eng.queue):
-            try:
-                rid, prompt, mx, t_sub = req_q.get_nowait()
-            except queue_mod.Empty:
+    with PreemptionGuard() as guard:
+        while True:
+            if guard.requested:
+                preempted = True
+                t0 = time.time()
+                for r in eng.drain():            # finish in-flight slots
+                    if r.rid >= 0:
+                        res_q.put(_done_msg(idx, r))
+                busy_s += time.time() - t0
+                for r in eng.queue:              # unseated: hand back
+                    if r.rid >= 0:
+                        res_q.put({"kind": "requeue", "replica": idx,
+                                   "rid": r.rid})
                 break
-            eng.submit(Request(rid=rid,
-                               prompt=np.asarray(prompt, np.int32),
-                               max_new=mx, submitted_at=t_sub))
-            pulled = True
-        if eng.busy:
-            t0 = time.time()
-            for r in eng.step():
-                if r.rid < 0:
-                    continue
-                res_q.put({"kind": "done", "replica": idx, "rid": r.rid,
-                           "out": [int(t) for t in r.out],
-                           "submitted_at": r.submitted_at,
-                           "done_at": r.done_at,
-                           "energy_pj": r.energy_pj})
-            busy_s += time.time() - t0
-        elif stop_evt.is_set():
-            break
-        elif not pulled:
-            time.sleep(POLL_S)
+            pulled = False
+            # pull only what this replica can seat: hoarding beyond the
+            # free slots would starve an idle peer racing the same FIFO
+            while eng.free_slots > len(eng.queue):
+                try:
+                    rid, prompt, mx, t_sub = req_q.get_nowait()
+                except queue_mod.Empty:
+                    break
+                res_q.put({"kind": "claim", "replica": idx, "rid": rid})
+                eng.submit(Request(rid=rid,
+                                   prompt=np.asarray(prompt, np.int32),
+                                   max_new=mx, submitted_at=t_sub))
+                pulled = True
+            if eng.busy:
+                t0 = time.time()
+                for r in eng.step():
+                    if r.rid < 0:
+                        continue
+                    res_q.put(_done_msg(idx, r))
+                busy_s += time.time() - t0
+            elif stop_evt.is_set():
+                break
+            elif not pulled:
+                time.sleep(POLL_S)
     wall = max(time.time() - t_ready, 1e-9)
-    res_q.put({"kind": "stats", "replica": idx,
+    res_q.put({"kind": "stats", "replica": idx, "preempted": preempted,
                "utilization": round(busy_s / wall, 4),
                "busy_s": round(busy_s, 4), "wall_s": round(wall, 4),
                "jit_traces": dict(eng.jit_traces),
@@ -185,7 +212,8 @@ def run_fleet(*, n_replicas=2, rate_rps=20.0, n_requests=48, arch="gemma3-1b",
               kv="paged", seed=0, max_batch=8, max_len=64, bucket=32,
               block_size=16, kv_blocks=None, slo_ms=2000.0, trace=None,
               check_tokens=False, mp_ctx="spawn", warm_passes=1,
-              affinity=None):
+              affinity=None, kill_after_done=None, kill_replica=None,
+              respawn=False):
     """Launch ``n_replicas`` engine processes behind one FIFO, drive the
     open-loop Poisson trace through them, and return the fleet report.
 
@@ -201,7 +229,20 @@ def run_fleet(*, n_replicas=2, rate_rps=20.0, n_requests=48, arch="gemma3-1b",
     registries are private — under FIFO racing a duplicate has a
     ``1/n_replicas`` chance of hitting the registry that saw the
     original).  Greedy tokens are routing-invariant, so the oracle check
-    is unaffected."""
+    is unaffected.
+
+    Crash handling: the dispatch loop polls every worker's
+    ``is_alive()``; a replica that dies without its final stats record
+    is a crash — its claimed-but-unfinished rids (and, under affinity,
+    its queued private work) are rerouted to the survivors, counted in
+    the report as ``replicas_crashed`` / ``requests_rerouted``, and with
+    ``respawn=True`` a replacement worker is started in its slot.
+    Rerouted requests keep their original ``submitted_at``, so the crash
+    penalty shows up honestly in the latency percentiles.  Fault
+    injection for tests/CI: ``kill_after_done=k`` SIGKILLs
+    ``kill_replica`` (default the last) once ``k`` timed requests have
+    completed — SIGKILL, not SIGTERM, because SIGTERM now means a
+    graceful preemption drain."""
     spec = {"arch": arch, "kv": kv, "seed": seed, "max_batch": max_batch,
             "max_len": max_len, "bucket": bucket, "block_size": block_size,
             "kv_blocks": kv_blocks}
@@ -222,29 +263,131 @@ def run_fleet(*, n_replicas=2, rate_rps=20.0, n_requests=48, arch="gemma3-1b",
     else:
         raise ValueError(f"affinity must be None or 'prompt', "
                          f"got {affinity!r}")
-    procs = [ctx.Process(target=_worker, args=(i, spec, req_qs[i], res_q,
-                                               stop_evt), daemon=True)
-             for i in range(n_replicas)]
-    for p in procs:
-        p.start()
 
-    results, stats, ready = {}, {}, 0
+    def spawn(i):
+        p = ctx.Process(target=_worker, args=(i, spec, req_qs[i], res_q,
+                                              stop_evt), daemon=True)
+        p.start()
+        return p
+
+    proc_by_idx = {i: spawn(i) for i in range(n_replicas)}
+    kill_replica = (n_replicas - 1 if kill_replica is None
+                    else int(kill_replica))
+
+    results, stats = {}, {}
+    ready = set()
+    claimed = {}                          # rid -> replica that pulled it
+    done_rids = set()
+    dead = set()                          # crashed replica indices
+    submit_t = {}                         # rid -> original submission time
+    counters = {"replicas_crashed": 0, "requests_rerouted": 0}
+    kill_state = {"armed": kill_after_done is not None}
+
+    def item_for(rid):
+        j = rid if rid < WARM_RID else (rid - WARM_RID) % n_requests
+        return (rid, prompts[j].tolist(), int(max_new[j]),
+                submit_t.get(rid, time.time()))
+
+    def put_item(item, avoid=()):
+        """Queue one request: the shared FIFO under racing dispatch, a
+        surviving replica's private queue under affinity."""
+        if affinity == "prompt":
+            surv = [i for i in proc_by_idx if i not in dead
+                    and i not in avoid] or [i for i in proc_by_idx
+                                            if i not in dead]
+            if not surv:
+                raise RuntimeError("all replicas crashed; nothing left to "
+                                   "reroute to")
+            req_qs[surv[item[0] % len(surv)]].put(item)
+        else:
+            req_qs[0].put(item)
+
+    def reroute(i):
+        """A replica died mid-run: requeue its claimed-but-unfinished
+        work (plus its private queue under affinity) on the survivors."""
+        pending = [item_for(rid) for rid, r in claimed.items()
+                   if r == i and rid not in done_rids]
+        if affinity == "prompt":
+            while True:
+                try:
+                    pending.append(req_qs[i].get_nowait())
+                except queue_mod.Empty:
+                    break
+        for item in pending:
+            put_item(item, avoid=(i,))
+            counters["requests_rerouted"] += 1
+
+    def handle(msg):
+        kind = msg["kind"]
+        if kind == "ready":
+            ready.add(msg["replica"])
+        elif kind == "claim":
+            claimed[msg["rid"]] = msg["replica"]
+        elif kind == "requeue":           # preempted worker handing back
+            if msg["rid"] not in done_rids:
+                put_item(item_for(msg["rid"]), avoid=(msg["replica"],))
+                counters["requests_rerouted"] += 1
+        elif kind == "done":
+            done_rids.add(msg["rid"])
+            if msg["rid"] < WARM_RID:
+                results[msg["rid"]] = msg
+        elif kind == "stats":
+            stats[msg["replica"]] = msg
+
+    def check_crashes():
+        """The liveness poll: any worker that is gone without having
+        delivered its stats record crashed — reroute its work, count it,
+        optionally respawn a replacement in its slot."""
+        for i, p in list(proc_by_idx.items()):
+            if i in dead or p.is_alive() or i in stats:
+                continue
+            dead.add(i)
+            counters["replicas_crashed"] += 1
+            reroute(i)
+            if respawn:
+                proc_by_idx[i] = spawn(i)
+                dead.discard(i)           # replacement owns the slot again
+
+    def maybe_kill():
+        if (kill_state["armed"] and kill_replica not in dead
+                and len(results) >= kill_after_done):
+            kill_state["armed"] = False
+            p = proc_by_idx.get(kill_replica)
+            if p is not None and p.is_alive():
+                p.kill()
+
+    def pump(timeout=READY_TIMEOUT_S):
+        """Receive one message, polling worker liveness while waiting —
+        a crash mid-run surfaces here as a reroute, not a hang."""
+        deadline = time.time() + timeout
+        while True:
+            try:
+                msg = res_q.get(timeout=0.05)
+            except queue_mod.Empty:
+                check_crashes()
+                if time.time() > deadline:
+                    raise RuntimeError(
+                        f"fleet stalled: no worker messages for "
+                        f"{timeout:.0f}s ({len(results)}/{n_requests} done, "
+                        f"crashed={sorted(dead)})")
+                continue
+            handle(msg)
+            return msg
+
+    t0 = time.time()
     try:
-        while ready < n_replicas:
-            msg = res_q.get(timeout=READY_TIMEOUT_S)
-            assert msg["kind"] == "ready", msg
-            ready += 1
+        while len(ready) < len([i for i in proc_by_idx if i not in dead]):
+            pump()
 
         for w in range(warm_passes):         # discarded steady-state warm
+            base = WARM_RID + w * n_requests
             for i in range(n_requests):
-                req_qs[home[i]].put((WARM_RID + w * n_requests + i,
-                                     prompts[i].tolist(), int(max_new[i]),
-                                     time.time()))
-            got = 0
-            while got < n_requests:
-                msg = res_q.get(timeout=READY_TIMEOUT_S)
-                got += (msg["kind"] == "done"
-                        and msg["rid"] >= WARM_RID)
+                submit_t[base + i] = time.time()
+                req_qs[home[i]].put((base + i, prompts[i].tolist(),
+                                     int(max_new[i]), submit_t[base + i]))
+            while len(done_rids & set(range(base, base + n_requests))) \
+                    < n_requests:
+                pump()
 
         rng = np.random.default_rng(seed + 1)
         arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, n_requests))
@@ -260,23 +403,23 @@ def run_fleet(*, n_replicas=2, rate_rps=20.0, n_requests=48, arch="gemma3-1b",
                         msg = res_q.get_nowait()
                     except queue_mod.Empty:
                         break
-                    results[msg["rid"]] = msg
+                    handle(msg)
+                check_crashes()
+                maybe_kill()
+            submit_t[i] = time.time()
             req_qs[home[i]].put((i, prompts[i].tolist(), int(max_new[i]),
-                                 time.time()))
+                                 submit_t[i]))
         while len(results) < n_requests:
-            msg = res_q.get(timeout=READY_TIMEOUT_S)
-            if msg["kind"] == "done":
-                results[msg["rid"]] = msg
+            pump()
+            maybe_kill()
         stop_evt.set()
-        while len(stats) < n_replicas:
-            msg = res_q.get(timeout=READY_TIMEOUT_S)
-            if msg["kind"] == "stats":
-                stats[msg["replica"]] = msg
-        for p in procs:
+        while any(i not in stats for i in proc_by_idx if i not in dead):
+            pump()
+        for p in proc_by_idx.values():
             p.join(timeout=60)
     finally:
         stop_evt.set()
-        for p in procs:
+        for p in proc_by_idx.values():
             if p.is_alive():
                 p.terminate()
 
@@ -303,6 +446,8 @@ def run_fleet(*, n_replicas=2, rate_rps=20.0, n_requests=48, arch="gemma3-1b",
         "latency_p99_s": round(float(np.percentile(lat, 99)), 4),
         "slo_ms": slo_ms,
         "slo_attainment": round(float(np.mean(lat <= slo_ms / 1e3)), 4),
+        "replicas_crashed": counters["replicas_crashed"],
+        "requests_rerouted": counters["requests_rerouted"],
         "per_replica": per_replica,
     }
     if check_tokens:
@@ -344,14 +489,31 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: 2 tiny replicas, 10 requests, token-"
                          "identity assert vs the dense oracle")
+    ap.add_argument("--smoke-fault", action="store_true",
+                    help="CI fault-injection gate: the 2-replica paged "
+                         "smoke with one replica SIGKILLed mid-trace — "
+                         "asserts completion, token identity, and "
+                         "replicas_crashed == 1")
+    ap.add_argument("--respawn", action="store_true",
+                    help="start a replacement worker in a crashed "
+                         "replica's slot")
+    ap.add_argument("--kill-after-done", type=int, default=None,
+                    help="fault injection: SIGKILL --kill-replica once "
+                         "this many timed requests completed")
+    ap.add_argument("--kill-replica", type=int, default=None)
     args = ap.parse_args(argv)
-    if args.smoke:
+    if args.smoke or args.smoke_fault:
         rec = run_fleet(n_replicas=2, rate_rps=10.0, n_requests=10,
                         arch=args.arch, kv=args.kv, seed=args.seed,
                         max_batch=4, max_len=64, bucket=32, block_size=16,
                         slo_ms=args.slo_ms, check_tokens=True,
                         trace=make_shared_trace(10, seed=args.seed,
-                                                max_news=(2, 8)))
+                                                max_news=(2, 8)),
+                        kill_after_done=(3 if args.smoke_fault else None),
+                        respawn=args.respawn)
+        if args.smoke_fault:
+            assert rec["replicas_crashed"] == 1, rec
+            assert rec["requests_rerouted"] >= 0, rec
     else:
         rec = run_fleet(n_replicas=args.replicas, rate_rps=args.rate,
                         n_requests=args.requests, arch=args.arch, kv=args.kv,
@@ -359,11 +521,16 @@ def main(argv=None):
                         max_len=args.max_len, bucket=args.bucket,
                         block_size=args.block_size, kv_blocks=args.kv_blocks,
                         slo_ms=args.slo_ms, check_tokens=args.check_tokens,
-                        affinity=args.affinity)
+                        affinity=args.affinity, respawn=args.respawn,
+                        kill_after_done=args.kill_after_done,
+                        kill_replica=args.kill_replica)
     print(json.dumps(rec, indent=1))
     print(f"[replicas] {rec['replicas']}x {rec['kv']}: "
           f"{rec['fleet_tokens_per_s']} tok/s, p50 {rec['latency_p50_s']}s, "
           f"p99 {rec['latency_p99_s']}s, SLO {rec['slo_attainment']:.0%}"
+          + (f", {rec['replicas_crashed']} crashed / "
+             f"{rec['requests_rerouted']} rerouted"
+             if rec["replicas_crashed"] else "")
           + (", token identity ok" if rec.get("token_identity") else ""))
     return rec
 

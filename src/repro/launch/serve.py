@@ -29,6 +29,11 @@ tokens through the bank-sharded substrate's amortized CTRL model
 the single-bank model and ``digital`` the conventional architecture.
 ``--temperature``/``--top-k`` switch the engine from greedy to per-slot
 sampling (fold_in(key, slot) streams).
+
+The engine drive runs under a ``PreemptionGuard``: SIGTERM/SIGINT stops
+admission, drains the in-flight slots to completion
+(``ServeEngine.drain``), and prints final per-request stats (tokens,
+latency, energy) plus the rids left unserved — no mid-decode kill.
 """
 from __future__ import annotations
 
@@ -42,6 +47,7 @@ import numpy as np
 from repro import dima as dima_api
 from repro.configs import RunConfig, get_arch, reduced
 from repro.core.params import DimaParams
+from repro.distributed.fault_tolerance import PreemptionGuard
 from repro.distributed.sharding import ShardCtx
 from repro.inference import Request, ServeEngine
 from repro.models import LM
@@ -204,10 +210,30 @@ def main(argv=None):
         prompts = np.asarray(toks, np.int32)
         for i in range(args.batch):
             eng.submit(Request(rid=i, prompt=prompts[i], max_new=args.gen))
-        done = sorted(eng.run(), key=lambda r: r.rid)
-        out = jnp.asarray(np.stack([r.out for r in done]))
+        done, preempted = [], False
+        with PreemptionGuard() as guard:
+            while eng.busy:
+                if guard.requested:      # SIGTERM/SIGINT: drain, don't admit
+                    preempted = True
+                    done.extend(eng.drain())
+                    break
+                done.extend(eng.step())
+        done = sorted(done, key=lambda r: r.rid)
+        if preempted:
+            for r in done:
+                print(f"[serve] drained rid={r.rid}: {len(r.out)} tokens, "
+                      f"{r.done_at - r.submitted_at:.2f}s, "
+                      f"{r.energy_pj/1e6:.2f} µJ")
+            unserved = [r.rid for r in eng.queue]
+            print(f"[serve] preempted: {len(done)} in-flight request(s) "
+                  f"drained, {len(unserved)} left queued {unserved}")
+            if not done:
+                return None
+            out = jnp.asarray(np.stack([r.out for r in done]))
+        else:
+            out = jnp.asarray(np.stack([r.out for r in done]))
     dt = time.time() - t0
-    n_tok = args.batch * args.gen
+    n_tok = out.shape[0] * args.gen
     print(f"[serve] generated {out.shape} in {dt:.2f}s "
           f"({n_tok/dt:.1f} tok/s incl. compile)")
     print("[serve] sample:", np.asarray(out[0][:12]))

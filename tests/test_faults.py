@@ -1,0 +1,308 @@
+"""Fleet robustness: bank fault injection, per-bank variation + drift,
+redundant-bank voting, voltage-domain recalibration, watchdog /
+preemption-guard edges, and the engine's maintenance cadence.
+
+The load-bearing contract: with every robustness feature at its default
+the multibank backend never enters the robust path (``robust`` is
+False), and with the robust path *forced* but inert (R=1, no variation,
+no active fault, no trim) its output is bit-for-bit the default path —
+so the fleet machinery can ship without perturbing the calibrated
+oracles."""
+import dataclasses
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import dima
+from repro.core import calibration as cal_mod
+from repro.core import noise as noise_mod
+from repro.core.params import BankVariation, DimaParams
+from repro.distributed.fault_tolerance import (BankFault, FaultSchedule,
+                                               PreemptionGuard, StepWatchdog)
+
+P = DimaParams()
+rng = np.random.default_rng(1)
+D = jnp.asarray(rng.integers(0, 256, (48, 256)))
+QS = jnp.asarray(rng.integers(0, 256, (3, 256)))
+CHIP = noise_mod.sample_chip(jax.random.PRNGKey(3), P)
+KEY = jax.random.PRNGKey(9)
+
+# truthy schedule whose fault never activates: forces the robust path
+# while keeping it functionally inert (the R=1 parity oracle)
+NEVER = FaultSchedule([BankFault(bank=0, kind="dead", start_epoch=10**9)])
+
+
+def _mb(**kw):
+    return dima.get_backend("multibank", P, kw.pop("chip", CHIP),
+                            n_banks=4, **kw)
+
+
+# ---------------------------------------------------------------------------
+# schedule validation + defaults stay on the fast path
+# ---------------------------------------------------------------------------
+
+def test_fault_validation():
+    with pytest.raises(ValueError):
+        BankFault(bank=0, kind="exploded")
+    with pytest.raises(ValueError):
+        BankFault(bank=-1)
+    f = BankFault(bank=2, kind="stuck", start_epoch=3, end_epoch=5)
+    assert not f.active(2) and f.active(3) and f.active(4) and not f.active(5)
+    assert BankFault(bank=0).active(10**6)      # end=None: permanent
+    sched = FaultSchedule([f])
+    assert bool(sched) and len(sched) == 1
+    assert sched.active(4) == [f] and sched.active(0) == []
+    with pytest.raises(TypeError):
+        FaultSchedule(["bank3"])
+
+
+def test_defaults_never_enter_robust_path():
+    be = _mb()
+    assert not be.robust
+    assert be.n_physical == be.n_banks
+    be_var = _mb(variation=BankVariation())    # all-zero model: inert
+    assert not be_var.robust
+    with pytest.raises(ValueError):            # varying pop needs a key
+        _mb(variation=BankVariation(sigma_scale=0.5))
+    with pytest.raises(ValueError):
+        _mb(redundancy=0)
+
+
+# ---------------------------------------------------------------------------
+# robust path: R=1 parity, fault transfers, voting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["dp", "md"])
+def test_robust_r1_is_bitwise_default_path(mode):
+    """Forced-but-inert robust path == the shipped fused path, codes and
+    volts bitwise, for matvec and matmat."""
+    plain, forced = _mb(), _mb(faults=NEVER)
+    assert forced.robust and not plain.robust
+    for kind in ("matvec", "matmat"):
+        q = QS[0] if kind == "matvec" else QS
+        a = getattr(plain, kind)(D, q, mode=mode, key=KEY)
+        b = getattr(forced, kind)(D, q, mode=mode, key=KEY)
+        np.testing.assert_array_equal(np.asarray(a.code), np.asarray(b.code))
+        np.testing.assert_allclose(np.asarray(a.volts), np.asarray(b.volts),
+                                   rtol=1e-6)
+        assert a.n_conversions == b.n_conversions
+
+
+def test_dead_bank_zeroes_exactly_its_rows():
+    clean = _mb().matmat(D, QS, key=KEY)
+    dead = _mb(faults=FaultSchedule([BankFault(bank=1, kind="dead")]))
+    out = dead.matmat(D, QS, key=KEY)
+    (a, z) = dead.bank_slices(D.shape[0])[1]
+    np.testing.assert_array_equal(np.asarray(out.code[:, a:z]), 0)
+    np.testing.assert_array_equal(np.asarray(out.code[:, :a]),
+                                  np.asarray(clean.code[:, :a]))
+    np.testing.assert_array_equal(np.asarray(out.code[:, z:]),
+                                  np.asarray(clean.code[:, z:]))
+
+
+def test_stuck_bank_pins_codes():
+    be = _mb(faults=FaultSchedule([BankFault(bank=0, kind="stuck",
+                                             stuck_code=200)]))
+    out = be.matmat(D, QS, key=KEY)
+    (a, z) = be.bank_slices(D.shape[0])[0]
+    np.testing.assert_array_equal(np.asarray(out.code[:, a:z]), 200)
+
+
+def test_fault_window_follows_epoch_clock():
+    be = _mb(faults=FaultSchedule([BankFault(bank=0, kind="dead",
+                                             start_epoch=2, end_epoch=3)]))
+    clean = _mb(faults=NEVER)
+    for epoch in range(4):
+        out = be.matmat(D, QS, key=KEY)
+        ref = clean.matmat(D, QS, key=KEY)
+        (a, z) = be.bank_slices(D.shape[0])[0]
+        if epoch == 2:
+            np.testing.assert_array_equal(np.asarray(out.code[:, a:z]), 0)
+        else:
+            np.testing.assert_array_equal(np.asarray(out.code),
+                                          np.asarray(ref.code))
+        be.advance_epoch()
+        clean.advance_epoch()
+
+
+def test_redundant_voting_outvotes_dead_replica():
+    """R=3 with replica 0 of logical bank 0 dead: the two healthy
+    replicas' median recovers the clean codes exactly (zero-noise chain
+    — with noise on, each replica draws its own fold_in(key, pb) stream
+    and the median is a denoised consensus, not a bitwise replay); the
+    fleet bills 3x the conversions."""
+    clean = _mb().matmat(D, QS)
+    be = _mb(redundancy=3,
+             faults=FaultSchedule([BankFault(bank=0, kind="dead")]))
+    out = be.matmat(D, QS)
+    np.testing.assert_array_equal(np.asarray(out.code),
+                                  np.asarray(clean.code))
+    assert out.n_conversions == 3 * clean.n_conversions
+
+
+# ---------------------------------------------------------------------------
+# variation + drift + recalibration
+# ---------------------------------------------------------------------------
+
+def test_bank_population_distinct_and_seeded():
+    var = BankVariation(sigma_scale=0.5)
+    chips = noise_mod.sample_bank_chips(jax.random.PRNGKey(0), P, 4, var)
+    assert chips["col_gain"].shape == (4,) + CHIP["col_gain"].shape
+    g = np.asarray(chips["col_gain"])
+    assert not np.allclose(g[0], g[1])         # per-bank silicon differs
+    again = noise_mod.sample_bank_chips(jax.random.PRNGKey(0), P, 4, var)
+    np.testing.assert_array_equal(g, np.asarray(again["col_gain"]))
+
+
+def test_scale_chip_endpoints():
+    s0 = noise_mod.scale_chip(CHIP, 0.0)       # severity 0 = ideal
+    np.testing.assert_allclose(np.asarray(s0["col_gain"]), 1.0)
+    np.testing.assert_allclose(np.asarray(s0["mult_off"]), 0.0)
+    s1 = noise_mod.scale_chip(CHIP, 1.0)       # severity 1 = the record
+    np.testing.assert_allclose(np.asarray(s1["col_gain"]),
+                               np.asarray(CHIP["col_gain"]))
+
+
+def test_drift_walk_and_voltage_recalibration():
+    """A strong gain-decay walk rails the signal out of the calibrated
+    window (large code error a code-domain trim cannot fix); the
+    voltage-domain per-bank window refresh recovers it."""
+    var = BankVariation(drift_gain_sigma=0.004, drift_gain_decay=0.02)
+    be = _mb(chip=None, variation=var)
+    vr = cal_mod.calibrate_range(be, D[None], QS[:2, None], mode="dp")
+    clean = np.asarray(_mb(chip=None).matmat(D, QS, v_range=vr).code,
+                       np.float64)
+    for e in range(12):
+        be.advance_epoch(jax.random.fold_in(jax.random.PRNGKey(5), e))
+    assert be.epoch == 12 and be.drift_state is not None
+    drifted = np.asarray(be.matmat(D, QS, v_range=vr).code, np.float64)
+    err_before = np.abs(drifted - clean).mean()
+    assert err_before > 5.0, err_before
+
+    g, o = be.recalibrate_banks(D, QS[:2], mode="dp", v_range=vr)
+    assert float(jnp.max(g)) < 1.0             # decay shrank every gain
+    recal = np.asarray(be.matmat(D, QS, v_range=vr).code, np.float64)
+    err_after = np.abs(recal - clean).mean()
+    assert err_after < 1.5, (err_before, err_after)
+
+    be.clear_trim()
+    raw = np.asarray(be.matmat(D, QS, v_range=vr).code, np.float64)
+    assert np.abs(raw - clean).mean() > 5.0    # trim was doing the work
+
+
+def test_severity_scaled_population_recalibrates():
+    var = BankVariation(sigma_scale=1.0)
+    be = _mb(chip=None, variation=var,
+             variation_key=jax.random.PRNGKey(11))
+    vr = cal_mod.calibrate_range(be, D[None], QS[:2, None], mode="dp")
+    clean = np.asarray(_mb(chip=None).matmat(D, QS, v_range=vr).code,
+                       np.float64)
+    raw = np.asarray(be.matmat(D, QS, v_range=vr).code, np.float64)
+    be.recalibrate_banks(D, QS[:2], mode="dp", v_range=vr)
+    recal = np.asarray(be.matmat(D, QS, v_range=vr).code, np.float64)
+    assert np.abs(recal - clean).mean() <= np.abs(raw - clean).mean()
+
+
+# ---------------------------------------------------------------------------
+# watchdog / preemption-guard edges
+# ---------------------------------------------------------------------------
+
+def test_watchdog_warmup_below_8_observations():
+    wd = StepWatchdog(threshold=3.0)
+    for _ in range(7):
+        assert not wd.observe(100.0)           # warm-up never flags
+    assert wd.straggler_steps == 0
+
+
+def test_watchdog_exact_threshold_is_not_straggler():
+    wd = StepWatchdog(threshold=3.0)
+    for _ in range(7):
+        wd.observe(1.0)
+    assert not wd.observe(3.0)                 # dt == 3.0 * p50: strict >
+    assert wd.observe(3.01)
+
+
+def test_watchdog_64_window_eviction():
+    wd = StepWatchdog(threshold=3.0)
+    for _ in range(64):
+        wd.observe(1.0)
+    assert wd.observe(10.0)                    # p50 still 1.0
+    for _ in range(63):
+        wd.observe(10.0)
+    # the 1.0-era samples have been evicted: p50 is now 10.0
+    assert not wd.observe(10.0)
+
+
+def test_preemption_guard_restores_handlers_on_exit():
+    before = signal.getsignal(signal.SIGTERM)
+    with PreemptionGuard() as g:
+        assert not g.requested
+        assert signal.getsignal(signal.SIGTERM) == g._handler
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert g.requested
+    assert signal.getsignal(signal.SIGTERM) == before
+
+
+def test_preemption_guard_restore_survives_nested_exception():
+    before = signal.getsignal(signal.SIGTERM)
+    with pytest.raises(RuntimeError):
+        with PreemptionGuard():
+            raise RuntimeError("boom")
+    assert signal.getsignal(signal.SIGTERM) == before
+
+
+# ---------------------------------------------------------------------------
+# engine maintenance cadence + drain
+# ---------------------------------------------------------------------------
+
+def _engine(**kw):
+    from repro.configs import RunConfig, get_arch, reduced
+    from repro.inference import Request, ServeEngine
+    from repro.models import LM
+    cfg = dataclasses.replace(reduced(get_arch("gemma3-1b")),
+                              dtype="float32")
+    model = LM(cfg, RunConfig())
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, bucket=8, max_batch=2, max_len=32, **kw)
+    reqs = [Request(rid=i,
+                    prompt=np.arange(1, 7, dtype=np.int32) + i,
+                    max_new=4) for i in range(3)]
+    return eng, reqs
+
+
+@pytest.mark.slow
+def test_engine_maintenance_counters_and_rebuild():
+    calls = []
+    be = dima.get_backend(
+        "multibank", n_banks=4,
+        variation=BankVariation(drift_gain_sigma=0.001))
+    eng, reqs = _engine(backend=be, drift_every=3,
+                        drift_key=jax.random.PRNGKey(2),
+                        recalibrate_every=5,
+                        recalibrate_fn=lambda e: calls.append(e))
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 3 and all(len(r.out) == 4 for r in done)
+    assert eng.stats["drift_epochs"] >= 1
+    assert eng.stats["recalibrations"] == len(calls) >= 1
+    assert be.epoch == eng.stats["drift_epochs"]
+    # each maintenance event rebuilds the jitted entry points
+    assert eng.jit_traces["decode"] >= 1 + eng.stats["drift_epochs"]
+
+
+def test_engine_drain_finishes_seated_only():
+    eng, reqs = _engine()
+    for r in reqs:
+        eng.submit(r)
+    first = eng.step()                         # seats the first 2
+    drained = eng.drain()
+    assert len(first) + len(drained) == 2
+    assert len(eng.queue) == 1 and eng.queue[0].rid == 2
+    assert eng.busy                            # the queued one remains
+    rest = eng.run()
+    assert {r.rid for r in rest} == {2}
