@@ -1,0 +1,142 @@
+"""Precision↔energy↔accuracy Pareto sweep for the ``bitserial`` backend.
+
+    PYTHONPATH=src python benchmarks/bench_precision.py [--smoke]
+
+Runs the four paper applications (SVM / MF / TM / KNN) at every plane
+count B ∈ {1, 2, 4, 8} on one sampled chip with the standard noise keys
+(core/applications.py ``run_all`` seeds) and writes the Pareto rows to
+the ``precision_sweep`` key of the repo-root ``BENCH_dima_api.json``
+(merged read-modify-write — every bench owns its key; ``--smoke`` writes
+the gitignored ``.smoke.json`` side file instead so CI never overwrites
+real measurements with toy-size numbers).
+
+Row schema (one per (B, app)): ``n_planes``, ``plane_bits``, ``app``,
+``acc_dima``, ``acc_digital``, ``energy_pj`` / ``energy_mb_pj``
+(``energy.bitserial_app_cost``, single-/multi-bank), ``time_ns``, plus
+the sweep-level ``platform`` tag.
+
+Hard guards (RuntimeError, CI-visible):
+ * the B=1 row is *bitwise-identical* to the shipped binary path — a
+   matvec through ``bitserial(n_planes=1)`` must reproduce the
+   ``reference`` backend's codes AND volts exactly, noisy chip included;
+ * per-app energy is strictly monotone in B (each extra plane adds a
+   full conversion's ADC + CTRL cost).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import dima  # noqa: E402
+from repro.core import applications as app_mod  # noqa: E402
+from repro.core import energy as energy_mod  # noqa: E402
+from repro.core import noise as noise_mod  # noqa: E402
+from repro.core.params import DimaParams  # noqa: E402
+
+PLANE_COUNTS = (1, 2, 4, 8)
+
+
+def check_binary_parity(p: DimaParams) -> None:
+    """B=1 must be the shipped binary path, bit for bit (noisy chip)."""
+    rng = np.random.default_rng(0)
+    d = rng.integers(0, 256, (200, 256), dtype=np.uint8)
+    q = rng.integers(0, 256, (256,), dtype=np.uint8)
+    chip = noise_mod.sample_chip(jax.random.PRNGKey(3), p)
+    key = jax.random.PRNGKey(9)
+    ref = dima.get_backend("reference", p, chip)
+    bs = dima.get_backend("bitserial", p, chip, n_planes=1)
+    for mode in ("dp", "md"):
+        a = ref.matvec(d, q, mode=mode, key=key)
+        b = bs.matvec(d, q, mode=mode, key=key)
+        if not (np.array_equal(np.asarray(a.code), np.asarray(b.code))
+                and np.array_equal(np.asarray(a.volts), np.asarray(b.volts))):
+            raise RuntimeError(
+                f"bitserial(n_planes=1) diverged from the reference "
+                f"binary path in {mode} mode — the B=1 row no longer "
+                f"describes the shipped behavior")
+
+
+def sweep(p: DimaParams, smoke: bool = False) -> dict:
+    apps = {"mf"} if smoke else None
+    planes = (1, 8) if smoke else PLANE_COUNTS
+    rows = []
+    for n_planes in planes:
+        results = app_mod.run_all(p, backend="bitserial",
+                                  backend_kwargs={"n_planes": n_planes},
+                                  apps=apps)
+        for name, r in results.items():
+            c = energy_mod.bitserial_app_cost(p, name, n_planes)
+            c_mb = energy_mod.bitserial_app_cost(p, name, n_planes,
+                                                 multi_bank=True)
+            rows.append({
+                "app": name,
+                "n_planes": n_planes,
+                "plane_bits": 8 // n_planes,
+                "acc_dima": round(r.acc_dima, 4),
+                "acc_digital": round(r.acc_digital, 4),
+                "energy_pj": round(c.energy_pj, 1),
+                "energy_mb_pj": round(c_mb.energy_pj, 1),
+                "time_ns": round(c.time_ns, 1),
+            })
+    # energy must grow strictly with the plane count, per app
+    by_app = {}
+    for row in sorted(rows, key=lambda r: r["n_planes"]):
+        prev = by_app.get(row["app"])
+        if prev is not None and row["energy_pj"] <= prev:
+            raise RuntimeError(
+                f"per-plane energy model not monotone for {row['app']}: "
+                f"B={row['n_planes']} costs {row['energy_pj']} pJ ≤ {prev}")
+        by_app[row["app"]] = row["energy_pj"]
+    return {"platform": jax.devices()[0].platform, "rows": rows}
+
+
+def write_json(sweep_result: dict, smoke: bool = False) -> str:
+    root = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+    name = ("BENCH_dima_api.smoke.json" if smoke else "BENCH_dima_api.json")
+    path = os.path.join(root, name)
+    merged = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+    merged["precision_sweep"] = sweep_result
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=1)
+    return path
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="MF only, B in {1, 8}; writes the .smoke.json "
+                         "side file")
+    args = ap.parse_args(argv)
+    p = DimaParams()
+
+    check_binary_parity(p)
+    print("[bench_precision] B=1 bitwise == shipped binary path: OK")
+
+    result = sweep(p, smoke=args.smoke)
+    path = write_json(result, smoke=args.smoke)
+
+    print(f"[bench_precision] wrote precision_sweep "
+          f"({len(result['rows'])} rows) -> {path}")
+    print(f"{'app':>5} {'B':>2} {'bits':>4} {'acc_dima':>8} "
+          f"{'acc_dig':>8} {'pJ':>9} {'pJ(mb)':>9}")
+    for r in result["rows"]:
+        print(f"{r['app']:>5} {r['n_planes']:>2} {r['plane_bits']:>4} "
+              f"{r['acc_dima']:>8.4f} {r['acc_digital']:>8.4f} "
+              f"{r['energy_pj']:>9.1f} {r['energy_mb_pj']:>9.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,15 @@ Backends (``get_backend(name | "auto")``):
                   reference otherwise; the row-count threshold comes from
                   the measured crossover in BENCH_dima_api.json when a
                   benchmark run has produced one.
+- ``bitserial`` — bit-scalable precision: the stored 8-b words split into
+                  ``n_planes`` bit planes (quant/bitplanes.py), every
+                  plane executed as its own analog op with the planes
+                  riding a leading vmap/kernel-grid axis inside ONE
+                  dispatch, then recombined by a shifted digital
+                  accumulate.  ``n_planes=1`` delegates verbatim to the
+                  reference path (paper-exact binary behavior);
+                  ``decision_cost`` bills per plane
+                  (``energy.bitserial_decision``).
 
 Ops on >256-dim vectors go through :func:`chunked_dot` — one ADC
 conversion per 256-dim segment, decoded codes summed digitally (exactly
@@ -1185,6 +1194,257 @@ class AutoBackend(DimaBackend):
         queries = jnp.asarray(queries)
         return self.pick(stored, queries[0], mode).matmat(
             stored, queries, mode=mode, key=key, v_range=v_range)
+
+
+# ---------------------------------------------------------------------------
+# bitserial: bit-scalable precision via per-plane analog ops
+# ---------------------------------------------------------------------------
+
+@register_backend("bitserial")
+class BitSerialBackend(DimaBackend):
+    """Bit-scalable precision: each stored 8-b word is split into
+    ``n_planes`` bit planes (``quant/bitplanes.py``), every plane runs as
+    its own analog op, and the per-plane results recombine by a shifted
+    digital accumulate — the IMAC / bit-scalable-accelerator scheme on
+    the DIMA substrate.
+
+    ``n_planes=1`` *delegates verbatim* to the reference path: same jit,
+    same key layout, bitwise-identical codes/volts including noisy runs —
+    the paper-exact binary-word behavior.
+
+    ``n_planes>1`` (default path) models the narrow-plane read with a
+    *linear* bit-plane transfer: plane reads bypass the 4-b sub-range
+    capacitive multiplier (a ``w = 8/B``-bit plane fits the BLP's linear
+    range), so the per-plane partial result is the exact integer plane
+    dot, optionally scaled by the chip's per-column gain and perturbed by
+    conversion noise when a ``key`` is supplied.  The shifted accumulate
+    ``sum_k 2**(k*w) * pd_k`` then *telescopes back to the exact 8-b
+    result*: with an ideal chip at zero noise the output is bitwise equal
+    to the ``digital`` backend (codes AND volts) for every valid B and
+    every ``v_range``.  All planes ride a leading vmap axis inside ONE
+    jitted computation — a multi-plane matvec is a single dispatch,
+    guarded by ``count_dispatches``.
+
+    ``physical=True`` instead pushes the planes through the banked fused
+    Pallas kernels (kernels/ops.py: planes on the bank-leading grid axis,
+    still one launch): the real nonlinear per-plane readout with an 8-b
+    ADC per plane — lossy, for realism studies; dp mode only.
+
+    MD mode at B>1 plane-splits the query too and accumulates per-plane
+    Manhattan distances — an upper bound on the 8-b distance (exact at
+    B=1), which is what makes precision an *accuracy* axis for TM/KNN in
+    the Pareto sweep.
+
+    Energy: ``decision_cost`` bills every plane's cycles + conversion
+    with the ΔV discount of its reduced swing
+    (``energy.bitserial_decision``); B=1 reduces exactly to
+    ``dima_decision``.
+    """
+
+    def __init__(self, p: DimaParams = None, chip=None, n_planes: int = 1,
+                 physical: bool = False, full_swing: bool = True,
+                 interpret: bool = None):
+        super().__init__(p, chip)
+        from repro.quant import bitplanes as bp_mod
+        self._bp = bp_mod
+        self.n_planes = int(n_planes)
+        self.plane_bits = bp_mod.plane_width(self.n_planes)  # validates B
+        self.physical = bool(physical)
+        self.full_swing = bool(full_swing)
+        self.interpret = interpret
+        self._ref = ReferenceBackend(self.p, chip)
+        self._jit = {}
+
+    def ideal(self) -> "BitSerialBackend":
+        return BitSerialBackend(self.p, None, n_planes=self.n_planes,
+                                physical=self.physical,
+                                full_swing=self.full_swing,
+                                interpret=self.interpret)
+
+    # -- the linear multi-plane core (one traced computation) ---------------
+
+    def _gain(self, mode):
+        return pl.dp_gain(self.p) if mode == "dp" else pl.md_gain(self.p)
+
+    def _default_range(self, mode):
+        full = 255.0 * 255.0 if mode == "dp" else 255.0
+        return (0.0, full * self._gain(mode))
+
+    def _sigma_pd(self, mode):
+        """Per-plane conversion noise referred to the digital (pd)
+        domain: the BL read noise of the two access cycles plus the CBLP
+        charge-share noise, divided by the transfer gain.  The noise is
+        constant in *volts*; what it costs in pd counts depends on the
+        plane's readout swing:
+
+        * ``full_swing=True``: the conversion is amplified to the full
+          range, so the plane's reduced numeric range maps onto the same
+          volts — plane-referred noise shrinks by ``plane_scale`` (the
+          standard bit-serial arrangement, billed at full cycle energy);
+        * ``full_swing=False``: the plane keeps its native per-bit swing
+          — cheaper cycles (``bitserial_decision``), but constant noise
+          now eats a ``1/plane_scale`` larger share of the shrunken
+          signal, and the shifted accumulate amplifies the MSB planes'
+          errors.  The cheap/noisy end of the precision knob.
+        """
+        p = self.p
+        var = 2.0 * (p.sigma_read_mv * 1e-3) ** 2 \
+            + (p.sigma_cblp_mv * 1e-3) ** 2
+        sigma = float(np.sqrt(var)) * p.dims_per_conversion \
+            / self._gain(mode)
+        if self.full_swing:
+            sigma *= self._bp.plane_scale(self.n_planes)
+        return sigma
+
+    def _plane_core(self, stored, query, mode, chip, key, v_range):
+        """Traced: (B planes as a leading axis) -> final code/volts."""
+        p, B, w = self.p, self.n_planes, self.plane_bits
+        d = jnp.asarray(stored, jnp.int32)
+        q = jnp.asarray(query, jnp.int32)
+        d, q = jnp.broadcast_arrays(d, q)
+        shifts = (w * jnp.arange(B, dtype=jnp.int32)) \
+            .reshape((B,) + (1,) * d.ndim)
+        mask = (1 << w) - 1
+        planes_d = (d[None, ...] >> shifts) & mask
+        if mode == "dp":
+            elem = planes_d * q                      # (B, ..., n) int32
+        else:
+            planes_q = (q[None, ...] >> shifts) & mask
+            elem = jnp.abs(planes_d - planes_q)
+        if chip is not None:
+            # narrow-plane reads bypass the sub-range multiplier; the
+            # per-column BLP gain is the surviving fixed-pattern term
+            n = elem.shape[-1]
+            col = chip["col_gain"][jnp.arange(n) % p.words_per_access]
+            pd = jnp.sum(elem.astype(jnp.float32) * col, axis=-1)
+        else:
+            pd = jnp.sum(elem, axis=-1)              # exact int32
+        if key is not None:
+            pd = pd + self._sigma_pd(mode) * jax.random.normal(key, pd.shape)
+        wts = (2 ** (w * jnp.arange(B))).astype(pd.dtype) \
+            .reshape((B,) + (1,) * (pd.ndim - 1))
+        acc = jnp.sum(pd * wts, axis=0)
+        # final transfer/ADC: literally DigitalBackend's arithmetic, so
+        # the exact path is bitwise-comparable to the digital backend
+        v = acc.astype(jnp.float32) / p.dims_per_conversion \
+            * self._gain(mode)
+        if v_range is None:
+            v_range = self._default_range(mode)
+        code = adc_mod.adc(v, v_range[0], v_range[1], p)
+        return code, v
+
+    def _fn(self, kind, mode):
+        _check_mode(mode)
+        k = (kind, mode)
+        if k not in self._jit:
+            if kind == "matmat":
+                def run(s, qs, chip, key, vr):
+                    if key is None:
+                        return jax.vmap(lambda q: self._plane_core(
+                            s, q, mode, chip, None, vr))(qs)
+                    keys = jax.random.split(key, qs.shape[0])
+                    return jax.vmap(lambda q, kk: self._plane_core(
+                        s, q, mode, chip, kk, vr))(qs, keys)
+                self._jit[k] = jax.jit(run)
+            else:
+                self._jit[k] = jax.jit(
+                    lambda s, q, chip, key, vr: self._plane_core(
+                        s, q, mode, chip, key, vr))
+        return self._jit[k]
+
+    # -- physical per-plane readout (planes on the bank-leading grid) -------
+
+    def _physical_matop(self, kind, stored, q, mode, key, v_range):
+        from repro.core import calibration as cal_mod
+        from repro.kernels import ops as ops_mod
+        if mode != "dp":
+            raise NotImplementedError(
+                "physical bitserial planes ride the dp bank kernels; "
+                "md needs a plane-split query per plane")
+        p, B, w = self.p, self.n_planes, self.plane_bits
+        stored = jnp.asarray(stored, jnp.uint8)
+        per = p.dims_per_conversion
+        pad = per - stored.shape[-1]
+        if pad:
+            stored = jnp.pad(stored, [(0, 0)] * (stored.ndim - 1) + [(0, pad)])
+            q = jnp.pad(jnp.asarray(q, jnp.uint8),
+                        [(0, 0)] * (jnp.asarray(q).ndim - 1) + [(0, pad)])
+        planes = self._bp.split_planes(stored, B)    # (B, m, 256)
+        plane_vr = cal_mod.plane_v_range(p, mode=mode, n_planes=B)
+        f = (ops_mod.dima_dp_plane_matvec if kind == "matvec"
+             else ops_mod.dima_dp_plane_matmat)
+        codes, _ = _dispatch(lambda: f(
+            planes, q, p, self.chip, key, plane_vr,
+            interpret=self.interpret))               # (B, [b,] m)
+        pd = pl.code_to_dot(codes, p, plane_vr)      # per-plane dot value
+        wts = (2.0 ** (w * jnp.arange(B))).reshape((B,) + (1,) * (pd.ndim - 1))
+        acc = jnp.sum(pd * wts, axis=0)
+        v = acc.astype(jnp.float32) / per * self._gain(mode)
+        if v_range is None:
+            v_range = self._default_range(mode)
+        code = adc_mod.adc(v, v_range[0], v_range[1], p)
+        return code, v
+
+    # -- the one signature --------------------------------------------------
+
+    def dot(self, stored, query, *, mode="dp", key=None,
+            v_range=None) -> DimaOut:
+        if self.n_planes == 1:
+            return self._ref.dot(stored, query, mode=mode, key=key,
+                                 v_range=v_range)
+        stored = jnp.asarray(stored)
+        query = jnp.asarray(query)
+        n = max(stored.shape[-1], query.shape[-1])
+        _check_op_dims(n, self.p)
+        code, volts = _dispatch(lambda: self._fn("op", mode)(
+            stored, query, self.chip, key, v_range))
+        return DimaOut(code, volts,
+                       self.n_planes * pl._cycles_per_op(n, self.p),
+                       self.n_planes)
+
+    def matvec(self, stored, query, *, mode="dp", key=None,
+               v_range=None) -> DimaOut:
+        if self.n_planes == 1:
+            return self._ref.matvec(stored, query, mode=mode, key=key,
+                                    v_range=v_range)
+        stored = jnp.asarray(stored)
+        m = stored.shape[0]
+        _check_op_dims(stored.shape[-1], self.p)
+        if self.physical:
+            code, volts = self._physical_matop("matvec", stored, query,
+                                               mode, key, v_range)
+        else:
+            code, volts = _dispatch(lambda: self._fn("matvec", mode)(
+                stored, jnp.asarray(query), self.chip, key, v_range))
+        cyc = pl._cycles_per_op(stored.shape[-1], self.p)
+        return DimaOut(code, volts, m * self.n_planes * cyc,
+                       m * self.n_planes)
+
+    def matmat(self, stored, queries, *, mode="dp", key=None,
+               v_range=None) -> DimaOut:
+        if self.n_planes == 1:
+            return self._ref.matmat(stored, queries, mode=mode, key=key,
+                                    v_range=v_range)
+        stored = jnp.asarray(stored)
+        queries = jnp.asarray(queries)
+        b, m = queries.shape[0], stored.shape[0]
+        _check_op_dims(stored.shape[-1], self.p)
+        if self.physical:
+            code, volts = self._physical_matop("matmat", stored, queries,
+                                               mode, key, v_range)
+        else:
+            code, volts = _dispatch(lambda: self._fn("matmat", mode)(
+                stored, queries, self.chip, key, v_range))
+        cyc = pl._cycles_per_op(stored.shape[-1], self.p)
+        return DimaOut(code, volts, b * m * self.n_planes * cyc,
+                       b * m * self.n_planes)
+
+    def decision_cost(self, n_dims: int, *, mode="dp", n_ops=1,
+                      multi_bank=False, **kw) -> energy_mod.Cost:
+        kw.setdefault("full_swing", self.full_swing)
+        return energy_mod.bitserial_decision(
+            self.p, n_dims, mode=mode, n_planes=self.n_planes,
+            n_ops=n_ops, multi_bank=multi_bank, **kw)
 
 
 # ---------------------------------------------------------------------------

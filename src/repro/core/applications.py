@@ -78,8 +78,9 @@ def train_linear_svm(X, y, steps=400, lr=0.5, c=1e-3, seed=0):
 
 
 def run_svm(p: DimaParams = DimaParams(), chip=None, key=None,
-            n_queries=100, seed=0, backend="reference") -> AppResult:
-    be = get_backend(backend, p, chip)
+            n_queries=100, seed=0, backend="reference",
+            backend_kwargs=None) -> AppResult:
+    be = get_backend(backend, p, chip, **(backend_kwargs or {}))
     X, y = synthetic.faces_dataset(seed=seed)
     Xtr, ytr = X[:-n_queries], y[:-n_queries]
     Xte, yte = X[-n_queries:], y[-n_queries:]
@@ -111,8 +112,9 @@ def run_svm(p: DimaParams = DimaParams(), chip=None, key=None,
 # ---------------------------------------------------------------------------
 
 def run_mf(p: DimaParams = DimaParams(), chip=None, key=None,
-           n_queries=100, seed=0, backend="reference") -> AppResult:
-    be = get_backend(backend, p, chip)
+           n_queries=100, seed=0, backend="reference",
+           backend_kwargs=None) -> AppResult:
+    be = get_backend(backend, p, chip, **(backend_kwargs or {}))
     Xq, yq, tmpl = synthetic.gunshot_queries(n_queries=n_queries + 64,
                                              seed=seed + 2)
     Xcal, ycal = Xq[:64], yq[:64]          # calibration split
@@ -141,8 +143,9 @@ def run_mf(p: DimaParams = DimaParams(), chip=None, key=None,
 # ---------------------------------------------------------------------------
 
 def run_tm(p: DimaParams = DimaParams(), chip=None, key=None,
-           n_queries=64, seed=0, backend="reference") -> AppResult:
-    be = get_backend(backend, p, chip)
+           n_queries=64, seed=0, backend="reference",
+           backend_kwargs=None) -> AppResult:
+    be = get_backend(backend, p, chip, **(backend_kwargs or {}))
     D, Q, yq = synthetic.face_id_dataset(n_queries=n_queries, seed=seed + 3)
 
     md_dig = np.asarray(pl.digital_manhattan(D[None, :, :], Q[:, None, :]))
@@ -162,8 +165,9 @@ def run_tm(p: DimaParams = DimaParams(), chip=None, key=None,
 # ---------------------------------------------------------------------------
 
 def run_knn(p: DimaParams = DimaParams(), chip=None, key=None,
-            n_queries=100, seed=0, k=5, backend="reference") -> AppResult:
-    be = get_backend(backend, p, chip)
+            n_queries=100, seed=0, k=5, backend="reference",
+            backend_kwargs=None) -> AppResult:
+    be = get_backend(backend, p, chip, **(backend_kwargs or {}))
     D, yd, Q, yq = synthetic.digits_dataset(n_queries=n_queries, seed=seed + 4)
 
     def vote(dist):
@@ -188,11 +192,16 @@ ALL_APPS = {"svm": run_svm, "mf": run_mf, "tm": run_tm, "knn": run_knn}
 
 
 def run_all(p: DimaParams = DimaParams(), chip_key=7, noise_key=11,
-            backend="reference"):
+            backend="reference", backend_kwargs=None, apps=None):
+    """Run the four applications on one sampled chip.  ``backend_kwargs``
+    reaches ``get_backend`` (e.g. ``{"n_planes": 4}`` for ``bitserial``);
+    ``apps`` optionally restricts to a subset of ``ALL_APPS``."""
     from repro.core import noise as noise_mod
     chip = noise_mod.sample_chip(jax.random.PRNGKey(chip_key), p)
     out = {}
     for name, fn in ALL_APPS.items():
+        if apps is not None and name not in apps:
+            continue
         out[name] = fn(p, chip, jax.random.PRNGKey(noise_key),
-                       backend=backend)
+                       backend=backend, backend_kwargs=backend_kwargs)
     return out

@@ -76,6 +76,25 @@ def calibrate_range(backend: api_mod.DimaBackend, stored, cal_queries, *,
     return adc_mod.calibrate_range(jnp.concatenate(volts), margin)
 
 
+def plane_v_range(p, mode="dp", n_planes: int = 1,
+                  margin: float = 0.0) -> Tuple[float, float]:
+    """ADC window for one bit plane's *physical* readout.
+
+    A ``w = 8/B``-bit plane develops at most ``(2**w - 1)/255`` of the
+    full-word swing, so programming the plane conversion with the
+    full-scale window would waste almost the entire code space at high B
+    (a w=1 plane would land in the bottom 1/255 of the ramp).  This is
+    the plane-serial analog of per-application auto-ranging: the default
+    window scaled to the plane's swing, with optional headroom.  All
+    planes of one split share the window (equal widths)."""
+    from repro.core import pipeline as pl_mod
+    from repro.quant import bitplanes as bp_mod
+    gain = pl_mod.dp_gain(p) if mode == "dp" else pl_mod.md_gain(p)
+    full = 255.0 * 255.0 if mode == "dp" else 255.0
+    hi = full * gain * bp_mod.plane_scale(n_planes)
+    return (0.0 - margin * hi, hi * (1.0 + margin))
+
+
 def calibrate(backend: api_mod.DimaBackend, stored, cal_queries, *,
               mode="dp", target=None, key=None, margin=0.05) -> Calibration:
     """Full calibration: ADC range (ideal-chip pass) + optional affine

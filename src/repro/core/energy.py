@@ -95,6 +95,55 @@ def dima_decision(p: DimaParams, n_dims: int, mode: str = "dp",
     return Cost(energy_pj=e, time_ns=t, accesses=n_cyc)
 
 
+def bitserial_decision(p: DimaParams, n_dims: int, mode: str = "dp",
+                       n_planes: int = 1, n_ops: int = 1,
+                       pipelined: bool = None, multi_bank: bool = False,
+                       n_sort: int = 0, full_swing: bool = True,
+                       n_banks: int = None) -> Cost:
+    """Cost of one decision executed bit-serially over ``n_planes``
+    planes (the ``bitserial`` backend's model).
+
+    Every plane is a full analog op — its own access cycles and its own
+    ADC conversion — so the access/conversion counts scale by B.  Two
+    swing regimes (matching the backend's noise model):
+
+    * ``full_swing=True`` (default): each plane's conversion is
+      amplified to the full BL/ADC range — the standard bit-serial
+      arrangement, full per-cycle energy, noise referred to the plane
+      shrinks with the plane width::
+
+          E(B) = B · [ n_cyc·E_cyc + n_conv·(E_adc + E_fixed + ovh) ]
+                 + n_sort·E_sort
+
+    * ``full_swing=False``: the plane keeps its native per-bit ΔV — a
+      ``w = 8/B``-bit plane develops ``s_w = (2**w - 1)/255`` of the
+      full-word swing, discounting the cycle energy through the existing
+      ΔV mechanism (``E_cyc·(0.55 + 0.45·s_w)``) at the price of
+      constant BL noise eating the shrunken signal (the cheap/noisy end
+      of the knob, the Fig. 5 trade at plane granularity).
+
+    The sort network runs once on the accumulated result, not per plane.
+    ``n_planes=1`` reduces *exactly* to ``dima_decision`` (s_8 = 1) —
+    the paper-exact binary-word cost.  E is strictly monotone in B in
+    both regimes: each extra plane adds the full ADC + CTRL fixed cost
+    and ≥55 % of the cycle energy, far more than the swing discount
+    removes.
+    """
+    from repro.quant import bitplanes as bp_mod
+    n_planes = int(n_planes)
+    if n_planes == 1:
+        return dima_decision(p, n_dims, mode, n_ops=n_ops,
+                             pipelined=pipelined, multi_bank=multi_bank,
+                             n_sort=n_sort, n_banks=n_banks)
+    scale = 1.0 if full_swing else bp_mod.plane_scale(n_planes)
+    per = dima_decision(p, n_dims, mode, n_ops=n_ops, pipelined=pipelined,
+                        multi_bank=multi_bank, n_sort=0,
+                        delta_v_scale=scale, n_banks=n_banks)
+    return Cost(energy_pj=per.energy_pj * n_planes + n_sort * p.e_sort_pj,
+                time_ns=per.time_ns * n_planes,
+                accesses=per.accesses * n_planes)
+
+
 def conventional_decision(p: DimaParams, n_dims: int, mode: str = "dp",
                           n_ops: int = 1, n_sort: int = 0) -> Cost:
     """The conventional fetch-then-compute architecture: 4:1 column-muxed
@@ -122,22 +171,36 @@ def access_reduction(p: DimaParams) -> float:
 # the four applications' cost definitions (Fig. 6 rows)
 # ---------------------------------------------------------------------------
 
+#: per-app op-shape definitions (Fig. 6 rows) — shared by ``app_cost``
+#: and the bitserial precision sweep (benchmarks/bench_precision.py)
+APP_ARGS = {
+    "svm": dict(n_dims=512, mode="dp", n_ops=1),   # 23×22 = 506-d, pad 512
+    "mf": dict(n_dims=256, mode="dp", n_ops=1),    # 256-dim DP
+    "tm": dict(n_dims=256, mode="md", n_ops=64, n_sort=64),  # 64 MD + sort
+    "knn": dict(n_dims=256, mode="md", n_ops=64, n_sort=64),
+}
+
+
 def app_cost(p: DimaParams, app: str, arch: str = "dima",
              multi_bank: bool = False) -> Cost:
-    if app == "svm":            # 23×22 = 506-dim DP, padded to 512
-        args = dict(n_dims=512, mode="dp", n_ops=1)
-    elif app == "mf":           # 256-dim DP
-        args = dict(n_dims=256, mode="dp", n_ops=1)
-    elif app == "tm":           # 64 × 256-dim MD + sort
-        args = dict(n_dims=256, mode="md", n_ops=64, n_sort=64)
-    elif app == "knn":
-        args = dict(n_dims=256, mode="md", n_ops=64, n_sort=64)
-    else:
+    if app not in APP_ARGS:
         raise KeyError(app)
+    args = APP_ARGS[app]
     if arch == "dima":
         return dima_decision(p, multi_bank=multi_bank, **args)
     return conventional_decision(p, **{k: v for k, v in args.items()
                                        if k != "pipelined"})
+
+
+def bitserial_app_cost(p: DimaParams, app: str, n_planes: int,
+                       multi_bank: bool = False,
+                       full_swing: bool = True) -> Cost:
+    """One of the four paper applications executed at B-plane precision —
+    the energy axis of the precision↔energy↔accuracy Pareto sweep."""
+    if app not in APP_ARGS:
+        raise KeyError(app)
+    return bitserial_decision(p, n_planes=n_planes, multi_bank=multi_bank,
+                              full_swing=full_swing, **APP_ARGS[app])
 
 
 PAPER_TABLE = {  # Fig. 6 "This work" rows: (energy pJ, multibank pJ, dec/s)

@@ -11,6 +11,11 @@
     # mesh=repro.distributed.sharding.bank_mesh() for device fan-out
     mb = dima.get_backend("multibank", n_banks=32)
 
+    # bit-scalable precision: B bit planes in ONE dispatch, shifted
+    # digital accumulate, per-plane decision_cost (B=1 == reference
+    # bitwise; B=8 zero-noise == digital bitwise)
+    bs = dima.get_backend("bitserial", n_planes=4)
+
     cal = dima.calibrate(be, stored, cal_queries, mode="dp",
                          target=digital_scores, key=k_cal)
     scores = dima.trimmed_scores(cal, be, stored, queries, key=k_test)
@@ -30,14 +35,14 @@ Migration from the seed entry points:
         -> repro.core.calibration.calibrate / trimmed_scores
 """
 from repro.core.api import (  # noqa: F401
-    MODES, BACKENDS, AutoBackend, DigitalBackend, DimaBackend,
-    MultiBankBackend, PallasBackend, ReferenceBackend, chunked_dot,
-    chunked_dot_loop, count_dispatches, get_backend, measured_min_rows,
-    register_backend, weights_energy_per_token,
+    MODES, BACKENDS, AutoBackend, BitSerialBackend, DigitalBackend,
+    DimaBackend, MultiBankBackend, PallasBackend, ReferenceBackend,
+    chunked_dot, chunked_dot_loop, count_dispatches, get_backend,
+    measured_min_rows, register_backend, weights_energy_per_token,
 )
 from repro.core.calibration import (  # noqa: F401
     Calibration, affine_trim, analog_feats, apply_trim, calibrate,
-    calibrate_range, trimmed_scores,
+    calibrate_range, plane_v_range, trimmed_scores,
 )
 from repro.core.params import DimaParams  # noqa: F401
 from repro.core.pipeline import (  # noqa: F401

@@ -40,7 +40,9 @@ whole-model weight-read price applies (``weights_energy_per_token``;
 the ``backend`` parameter picks the substrate whose cost model is used
 — amortized multi-bank CTRL for ``"multibank"``, single-bank for
 ``"reference"``/``"pallas"``, conventional fetch-then-compute for
-``"digital"``).  With an ``analog_lm.AnalogRouter`` attached, the price
+``"digital"``, and per-plane bit-serial billing for ``"bitserial"``:
+every weight read costs B plane conversions, so pJ/token scales with
+the configured precision).  With an ``analog_lm.AnalogRouter`` attached, the price
 is the router's own account of the analog conversions each token
 *actually executes* on its planned banks plus the conventional price of
 the weights that stay digital (``AnalogRouter.pj_per_token``).
@@ -141,6 +143,11 @@ class ServeEngine:
         self.jit_traces = {"prefill": 0, "decode": 0, "insert": 0, "cow": 0}
         self._pj_per_token = 0.0
         self.n_banks = 0
+        #: bit-serial precision of the costing backend: a ``bitserial``
+        #: backend bills every weight read per plane through its
+        #: ``decision_cost`` override, so ``_pj_per_token`` scales with
+        #: the plane count automatically; recorded here for reporting
+        self.n_planes = int(getattr(self.backend, "n_planes", 1))
         if dima is not None:
             if hasattr(dima, "pj_per_token"):
                 # analog_lm router: price the analog ops the routed

@@ -277,6 +277,39 @@ def dima_md_bank_matmat(d, qs, p: DimaParams = DimaParams(), chip=None,
     return _bank_fused(d, qs, p, chip, key, v_range, interpret, "md", False)
 
 
+# ---------------------------------------------------------------------------
+# plane-fused wrappers: the bitserial backend's bit planes as ONE launch
+# ---------------------------------------------------------------------------
+#
+# A bit-plane stack from ``quant.bitplanes.split_planes`` has exactly the
+# layout of the multibank backend's stacked full banks — (B, M, 256)
+# uint8 with an independent leading axis — so the *physical* per-plane
+# readout rides the existing bank-leading kernel grids unchanged: plane
+# ``k`` takes the slot (and the ``fold_in(key, k)`` noise stream) bank
+# ``k`` would.  One launch for all planes; the shifted digital accumulate
+# happens in the caller (``BitSerialBackend(physical=True)``), exactly
+# like the multibank digital code merge.
+
+def dima_dp_plane_matvec(planes, q, p: DimaParams = DimaParams(), chip=None,
+                         key=None, v_range=None, interpret=None):
+    """Plane-fused DP matvec: planes (B, M, 256) uint8 bit planes vs one
+    query q (256,).  Plane ``k`` draws noise from ``fold_in(key, k)``.
+    Returns (codes (B, M), volts (B, M)) from ONE launch.  Pass a
+    ``calibration.plane_v_range`` window — the full-scale default wastes
+    the code space on narrow planes."""
+    return _bank_fused(planes, q, p, chip, key, v_range, interpret,
+                       "dp", True)
+
+
+def dima_dp_plane_matmat(planes, qs, p: DimaParams = DimaParams(), chip=None,
+                         key=None, v_range=None, interpret=None):
+    """Plane-fused DP matmat: planes (B, M, 256) vs queries qs (b, 256);
+    returns (codes (B, b, M), volts) from ONE (B, b, M/128)-grid
+    launch (see ``dima_dp_plane_matvec``)."""
+    return _bank_fused(planes, qs, p, chip, key, v_range, interpret,
+                       "dp", False)
+
+
 def flash_attention_gqa(q, k, v, *, interpret=None):
     """q: (B, S, H, dh); k, v: (B, S, KV, dh); causal.
     Folds (B, groups) onto the kernel batch axis."""

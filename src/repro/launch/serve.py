@@ -27,6 +27,9 @@ Reports tokens/s and, for the DIMA paths, the modeled pJ/token
 tokens through the bank-sharded substrate's amortized CTRL model
 (``--n-banks`` overrides the paper's 32); the other analog backends use
 the single-bank model and ``digital`` the conventional architecture.
+``--precision B`` selects the ``bitserial`` substrate: every weight read
+executes as B bit planes and each token is billed B plane conversions
+per weight byte (B=1 is the paper-exact binary-word path).
 ``--temperature``/``--top-k`` switch the engine from greedy to per-slot
 sampling (fold_in(key, slot) streams).
 
@@ -55,15 +58,19 @@ from repro.quant import DimaNoiseModel, quantize_params
 
 
 def dima_energy_per_token(cfg, p: DimaParams = DimaParams(), backend=None,
-                          n_banks=None):
+                          n_banks=None, n_planes=1):
     """Modeled DIMA decode energy: every active weight byte is read once
     per token through MR-FR banks.  Routed through the unified backend
     API so the substrate is swappable — ``"multibank"`` amortizes the
     fixed CTRL energy over its banks (and, since the fused bank axis,
-    also *executes* all banks in one dispatch), everything else prices
+    also *executes* all banks in one dispatch), ``"bitserial"`` bills
+    every read per plane (``n_planes``×), everything else prices
     single-bank (``"digital"``: the conventional architecture)."""
-    kw = ({"n_banks": n_banks}
-          if (backend == "multibank" and n_banks is not None) else {})
+    kw = {}
+    if backend == "multibank" and n_banks is not None:
+        kw["n_banks"] = n_banks
+    if backend == "bitserial":
+        kw["n_planes"] = n_planes
     be = dima_api.get_backend(backend or "reference", p, **kw)
     return dima_api.weights_energy_per_token(cfg.active_param_count(), be)
 
@@ -98,6 +105,17 @@ def generate(model, params, tokens, gen_len, dima=None):
     return jnp.stack(out, axis=1)
 
 
+def _make_backend(args):
+    """The costing/execution backend the CLI selected: multibank takes
+    --n-banks, bitserial takes --precision, the rest are bare."""
+    kw = {}
+    if args.n_banks is not None:
+        kw["n_banks"] = args.n_banks
+    if args.backend == "bitserial":
+        kw["n_planes"] = args.precision
+    return dima_api.get_backend(args.backend, **kw)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-1b")
@@ -119,6 +137,13 @@ def main(argv=None):
     ap.add_argument("--n-banks", type=int, default=None,
                     help="bank count for --backend multibank "
                          "(default: the paper's 32-bank scenario)")
+    ap.add_argument("--precision", type=int, default=1,
+                    choices=[1, 2, 4, 8], metavar="B",
+                    help="bit-serial plane count (B in {1,2,4,8}): selects "
+                         "the bitserial substrate — weights execute as B "
+                         "bit planes per read and every token is billed "
+                         "B plane conversions per weight byte (1 = the "
+                         "paper-exact binary-word path)")
     ap.add_argument("--kv", default="auto",
                     choices=["auto", "paged", "dense"],
                     help="KV-cache layout: paged = global block pool + "
@@ -138,6 +163,11 @@ def main(argv=None):
     if args.n_banks is not None and args.backend != "multibank":
         ap.error(f"--n-banks only applies to --backend multibank "
                  f"(got --backend {args.backend})")
+    if args.precision != 1 and args.backend not in ("reference", "bitserial"):
+        ap.error(f"--precision {args.precision} needs the bitserial "
+                 f"substrate (got --backend {args.backend})")
+    if args.precision != 1:
+        args.backend = "bitserial"
     if args.analog_lm and args.quant == "dima4":
         ap.error("--analog-lm requires 8-bit records (--quant dima)")
     if args.analog_lm:
@@ -158,9 +188,7 @@ def main(argv=None):
                 ap.error("--analog-lm needs a token-id arch "
                          "(external_embed archs bypass the engine)")
             from repro.analog_lm import AnalogRouter, calibrate_model
-            be = (dima_api.get_backend(args.backend)
-                  if args.n_banks is None else
-                  dima_api.get_backend(args.backend, n_banks=args.n_banks))
+            be = _make_backend(args)
             cal = np.asarray(jax.random.randint(
                 jax.random.PRNGKey(args.seed + 2), (2, args.prompt_len),
                 0, cfg.vocab_size), np.int32)
@@ -177,7 +205,7 @@ def main(argv=None):
             if args.dima_noise:
                 dima = DimaNoiseModel(key=jax.random.PRNGKey(args.seed + 1))
             pj, banks = dima_energy_per_token(cfg, DimaParams(), args.backend,
-                                              args.n_banks)
+                                              args.n_banks, args.precision)
             if args.backend == "digital":   # bank-less conventional arch
                 where = f"{cfg.active_param_count():,} weight bytes/token"
                 amort = "conventional fetch-then-compute"
@@ -185,6 +213,11 @@ def main(argv=None):
                 nb = args.n_banks or DimaParams().n_banks_multibank
                 where = f"{banks:,} SRAM banks"
                 amort = f"multi-bank ×{nb}, amortized CTRL"
+            elif args.backend == "bitserial":
+                where = f"{banks:,} SRAM banks"
+                amort = (f"bit-serial ×{args.precision} planes"
+                         if args.precision != 1 else
+                         "bit-serial, single 8-b plane")
             else:
                 where = f"{banks:,} SRAM banks"
                 amort = "single-bank"
@@ -202,9 +235,7 @@ def main(argv=None):
             model, params, bucket=args.prompt_len, max_batch=args.batch,
             max_len=args.prompt_len + args.gen, dima=dima,
             kv=args.kv, block_size=args.block_size, kv_blocks=args.kv_blocks,
-            backend=(dima_api.get_backend(args.backend)
-                     if args.n_banks is None else
-                     dima_api.get_backend(args.backend, n_banks=args.n_banks)),
+            backend=_make_backend(args),
             temperature=args.temperature, top_k=args.top_k,
             sample_key=jax.random.PRNGKey(args.seed + 3))
         prompts = np.asarray(toks, np.int32)

@@ -1,0 +1,104 @@
+"""Bit-plane decomposition of the 8-b DIMA word.
+
+The chip's functional read is effectively *binary-weight*: one access
+develops a bit-line swing proportional to one stored word.  IMAC
+(arXiv:2003.12558) and the Princeton bit-scalable accelerator
+(arXiv:1811.04047) show the same 6T array turns into a multi-bit MAC
+engine by splitting each word into B bit *planes*, reading each plane
+as its own analog op, and recombining the per-plane results with a
+shifted digital accumulate.
+
+This module is the pure tensor layer of that scheme — the registered
+``bitserial`` backend (core/api.py) executes the planes.  Conventions:
+
+* A stored word is offset-binary uint8 (signed value ``w`` lives in the
+  array as ``w + 128``), exactly as everywhere else in the repo.
+* ``n_planes`` B must divide 8; each plane holds ``w = 8 // B``
+  contiguous bits, **LSB-first**::
+
+      word = sum_k  plane_k << (k * w),      plane_k in [0, 2**w)
+
+  B=1 is the paper-exact single 8-b word, B=2 is the two-nibble scheme
+  ``quant/subrange.py`` models at tensor level, B=8 is fully bit-serial.
+* Sign-split (``sign_split``/``sign_merge``) represents a *signed*
+  tensor as a (pos, neg) pair of non-negative magnitude arrays — the
+  same differential-row trick the analog-LM bank planner uses — so a
+  signed weight can ride two unsigned plane stacks.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+#: plane counts with an integer plane width (8-b words)
+PLANE_COUNTS = (1, 2, 4, 8)
+
+
+def plane_width(n_planes: int) -> int:
+    """Bits per plane for a B-plane split of an 8-b word; validates B."""
+    n_planes = int(n_planes)
+    if n_planes not in PLANE_COUNTS:
+        raise ValueError(
+            f"n_planes must be one of {PLANE_COUNTS} (got {n_planes}): "
+            f"each plane holds 8 // B contiguous bits of the 8-b word")
+    return 8 // n_planes
+
+
+def plane_shifts(n_planes: int):
+    """LSB-first bit offsets of each plane: ``k * (8 // B)``, int32."""
+    w = plane_width(n_planes)
+    return w * jnp.arange(n_planes, dtype=jnp.int32)
+
+
+def plane_weights(n_planes: int):
+    """Shifted-accumulate weights ``2**(k*w)`` (int32, LSB-first)."""
+    w = plane_width(n_planes)
+    return (jnp.int32(1) << (w * jnp.arange(n_planes, dtype=jnp.int32)))
+
+
+def plane_scale(n_planes: int) -> float:
+    """Bit-line swing of one plane relative to a full 8-b word read:
+    ``(2**w - 1) / 255``.  A narrower plane develops proportionally less
+    charge on the BL — this is the ``delta_v_scale`` the per-plane
+    energy model (core/energy.py ``bitserial_decision``) bills with."""
+    return float(2 ** plane_width(n_planes) - 1) / 255.0
+
+
+def split_planes(words, n_planes: int):
+    """uint8 words (any shape) -> (B, *shape) uint8 planes, LSB-first.
+
+    Exact: ``merge_planes(split_planes(x, B), B) == x`` for every uint8
+    input and every valid B (the pack->unpack identity the property
+    tests pin)."""
+    w = plane_width(n_planes)
+    x = jnp.asarray(words, jnp.int32)
+    shifts = plane_shifts(n_planes).reshape((n_planes,) + (1,) * x.ndim)
+    return ((x[None, ...] >> shifts) & ((1 << w) - 1)).astype(jnp.uint8)
+
+
+def merge_planes(planes, n_planes: int = None):
+    """(B, *shape) planes -> uint8 words: ``sum_k plane_k << (k*w)``."""
+    planes = jnp.asarray(planes)
+    b = planes.shape[0] if n_planes is None else int(n_planes)
+    w = plane_width(b)
+    shifts = plane_shifts(b).reshape((b,) + (1,) * (planes.ndim - 1))
+    return jnp.sum(planes.astype(jnp.int32) << shifts, axis=0) \
+              .astype(jnp.uint8)
+
+
+def sign_split(values):
+    """Signed array -> (pos, neg) uint8 magnitudes with
+    ``values == pos - neg`` (elementwise, one side always zero).
+    Magnitudes must fit 8 bits; out-of-range input raises."""
+    v = np.asarray(values, np.int32)
+    if v.min() < -255 or v.max() > 255:
+        raise ValueError("sign_split magnitudes must fit 8 bits "
+                         f"(got range [{v.min()}, {v.max()}])")
+    pos = np.where(v > 0, v, 0).astype(np.uint8)
+    neg = np.where(v < 0, -v, 0).astype(np.uint8)
+    return jnp.asarray(pos), jnp.asarray(neg)
+
+
+def sign_merge(pos, neg):
+    """Inverse of ``sign_split``: int32 signed values ``pos - neg``."""
+    return jnp.asarray(pos, jnp.int32) - jnp.asarray(neg, jnp.int32)

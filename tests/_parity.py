@@ -1,0 +1,138 @@
+"""Shared backend-parity harness.
+
+The bitwise-parity idiom — run the same op through two backends, assert
+codes are identical, volts are identical-or-within-float-assembly-atol,
+and the cycle/conversion accounting agrees — used to be copy-pasted
+across the test files.  This module is the single implementation:
+
+* ``BackendCase``: one (backend-under-test, oracle) pairing with its
+  construction kwargs and volts tolerance.  ``PARITY_CASES`` is the
+  standing matrix every registered analog substrate joins — adding a
+  backend here puts it under every migrated parity test at once (that is
+  how ``bitserial`` registered "for free").
+* ``parametrize_backends()``: a ``pytest.mark.parametrize`` over the
+  matrix (optionally filtered), with readable ids.
+* ``assert_bitwise_parity(op, ref_be, test_be, *args, ...)``: run the
+  named op on both backends and compare.
+* ``assert_outs_equal(a, b, ...)``: compare two already-computed results
+  (``DimaOut`` or raw ``(codes, volts)`` pairs) — the helper the
+  fused-vs-loop and kernel-vs-core tests share.
+
+Noise caveat: different substrates draw their dynamic noise in different
+shapes, so cross-backend parity is asserted at ``key=None`` (zero
+noise); same-substrate comparisons (fused vs loop, B=1 vs reference)
+may pass a key.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from repro import dima
+
+
+class BackendCase(NamedTuple):
+    """One backend-vs-oracle parity pairing."""
+    name: str                        # backend under test (registry name)
+    kwargs: dict                     # constructor kwargs
+    oracle: str = "reference"        # backend it must agree with
+    volts_atol: float = 0.0          # 0.0 = bitwise volts equality
+    chip: bool = True                # pair valid with a sampled chip?
+    modes: Tuple[str, ...] = ("dp", "md")   # modes the parity holds in
+
+    @property
+    def id(self) -> str:
+        kw = ",".join(f"{k}={v}" for k, v in sorted(self.kwargs.items()))
+        return f"{self.name}({kw})~{self.oracle}" if kw \
+            else f"{self.name}~{self.oracle}"
+
+
+#: the standing parity matrix: every analog substrate against its oracle.
+#: pallas tolerates float-assembly volts differences (same math, different
+#: op order in the kernel); everything else is bitwise on volts too.
+#: bitserial B>1 runs the exact linear plane model, whose oracle is the
+#: *digital* backend (ideal chip only — digital has no mismatch record);
+#: its md output is an upper bound, not an identity, so those rows pin
+#: dp only.
+PARITY_CASES = (
+    BackendCase("pallas", {}, "reference", volts_atol=1e-7),
+    BackendCase("multibank", {"n_banks": 1}, "reference"),
+    BackendCase("bitserial", {"n_planes": 1}, "reference"),
+    BackendCase("bitserial", {"n_planes": 2}, "digital", chip=False,
+                modes=("dp",)),
+    BackendCase("bitserial", {"n_planes": 4}, "digital", chip=False,
+                modes=("dp",)),
+    BackendCase("bitserial", {"n_planes": 8}, "digital", chip=False,
+                modes=("dp",)),
+)
+
+
+def parametrize_backends(cases=PARITY_CASES, *, chip_only: bool = False):
+    """``@parametrize_backends()`` → parametrized ``case: BackendCase``.
+    ``chip_only`` keeps the pairings that are valid with a sampled chip
+    record (drops the digital-oracle rows)."""
+    import pytest
+    picked = [c for c in cases if (c.chip or not chip_only)]
+    return pytest.mark.parametrize("case", picked,
+                                   ids=[c.id for c in picked])
+
+
+def make_pair(case: BackendCase, p=None, chip=None):
+    """(oracle backend, backend under test) for one matrix row; the chip
+    record is withheld from digital-oracle pairings (see PARITY_CASES)."""
+    chip = chip if case.chip else None
+    ref = dima.get_backend(case.oracle, p, chip)
+    ut = dima.get_backend(case.name, p, chip, **case.kwargs)
+    return ref, ut
+
+
+def _codes_volts(out) -> Tuple[np.ndarray, np.ndarray]:
+    if hasattr(out, "code"):
+        return np.asarray(out.code), np.asarray(out.volts)
+    code, volts = out
+    return np.asarray(code), np.asarray(volts)
+
+
+def assert_outs_equal(a, b, *, volts_atol: float = 0.0,
+                      counts: bool = True, label: str = "") -> None:
+    """Two results of the same op must agree: codes bitwise, volts
+    bitwise (``volts_atol=0``) or allclose, and — when both carry the
+    accounting fields — identical cycle/conversion counts."""
+    ca, va = _codes_volts(a)
+    cb, vb = _codes_volts(b)
+    tag = f" [{label}]" if label else ""
+    np.testing.assert_array_equal(
+        ca, cb, err_msg=f"ADC codes diverged{tag}")
+    if volts_atol == 0.0:
+        np.testing.assert_array_equal(
+            va, vb, err_msg=f"volts diverged (bitwise){tag}")
+    else:
+        np.testing.assert_allclose(
+            va, vb, atol=volts_atol, rtol=0,
+            err_msg=f"volts diverged (atol={volts_atol}){tag}")
+    if counts and hasattr(a, "n_cycles") and hasattr(b, "n_cycles"):
+        assert (a.n_cycles, a.n_conversions) == (b.n_cycles,
+                                                 b.n_conversions), \
+            f"cycle/conversion accounting diverged{tag}: " \
+            f"{(a.n_cycles, a.n_conversions)} != " \
+            f"{(b.n_cycles, b.n_conversions)}"
+
+
+def assert_bitwise_parity(op: str, ref_be, test_be, *args, mode="dp",
+                          key=None, v_range=None, volts_atol: float = 0.0,
+                          counts: Optional[bool] = None) -> None:
+    """Run backend method ``op`` ("dot" / "manhattan" / "matvec" /
+    "matmat") on both backends with identical inputs and assert parity.
+
+    ``counts`` defaults to skipping the accounting comparison when the
+    two backends model different substrates (a bitserial B-plane op
+    legitimately reports B× the conversions of the digital oracle)."""
+    a = getattr(ref_be, op)(*args, mode=mode, key=key, v_range=v_range)
+    b = getattr(test_be, op)(*args, mode=mode, key=key, v_range=v_range)
+    if counts is None:
+        counts = getattr(ref_be, "name", "") == getattr(test_be, "name", "")
+        counts = counts or (getattr(test_be, "n_planes", 1) == 1
+                            and getattr(ref_be, "name", "") == "reference")
+    assert_outs_equal(a, b, volts_atol=volts_atol, counts=counts,
+                      label=f"{op}/{mode}")

@@ -1,0 +1,281 @@
+"""The ``bitserial`` backend: bit-plane split + per-plane analog ops +
+shifted digital accumulate behind the stable ``DimaBackend`` surface.
+
+Acceptance pins (ISSUE 9):
+ * B=1 delegates verbatim to the reference path — bitwise codes AND
+   volts, noisy chip included;
+ * the exact linear plane model telescopes back to the digital backend:
+   B ∈ {2, 4, 8} at zero noise / ideal chip are bitwise-equal to
+   ``digital`` in dp mode, for any v_range;
+ * a multi-plane matvec / matmat is ONE dispatch
+   (``dima.count_dispatches``);
+ * ``decision_cost`` is strictly monotone in B and reduces exactly to
+   ``dima_decision`` at B=1; engine-style per-token billing scales with
+   the plane count.
+"""
+import jax
+import numpy as np
+import pytest
+
+from _parity import (assert_bitwise_parity, assert_outs_equal, make_pair,
+                     parametrize_backends)
+from repro import dima
+from repro.core import calibration as cal_mod
+from repro.core import energy as energy_mod
+from repro.core import noise as noise_mod
+from repro.core.params import DimaParams
+from repro.kernels import ops as ops_mod
+from repro.quant import bitplanes as bp
+
+P = DimaParams()
+rng = np.random.default_rng(0)
+D = rng.integers(0, 256, (200, 256), dtype=np.uint8)
+Q = rng.integers(0, 256, (256,), dtype=np.uint8)
+QS = rng.integers(0, 256, (3, 256), dtype=np.uint8)
+CHIP = noise_mod.sample_chip(jax.random.PRNGKey(3), P)
+KEY = jax.random.PRNGKey(9)
+
+
+# ---------------------------------------------------------------------------
+# registry / construction
+# ---------------------------------------------------------------------------
+
+def test_registered_in_get_backend():
+    be = dima.get_backend("bitserial", P, n_planes=4)
+    assert isinstance(be, dima.BitSerialBackend)
+    assert be.n_planes == 4 and be.plane_bits == 2
+    assert "bitserial" in dima.BACKENDS
+
+
+def test_invalid_plane_count_rejected():
+    with pytest.raises(ValueError, match="n_planes"):
+        dima.get_backend("bitserial", P, n_planes=3)
+
+
+def test_ideal_keeps_precision():
+    be = dima.get_backend("bitserial", P, CHIP, n_planes=8)
+    ideal = be.ideal()
+    assert ideal.chip is None and ideal.n_planes == 8
+
+
+# ---------------------------------------------------------------------------
+# the standing parity matrix (tests/_parity.py) — bitserial rows included
+# ---------------------------------------------------------------------------
+
+@parametrize_backends()
+@pytest.mark.parametrize("op,args", [("matvec", (D, Q)), ("matmat", (D, QS))])
+def test_parity_matrix_zero_noise(case, op, args):
+    ref, ut = make_pair(case, P, CHIP)
+    assert_bitwise_parity(op, ref, ut, *args, mode="dp",
+                          volts_atol=case.volts_atol)
+
+
+def test_b1_is_reference_bitwise_including_noise():
+    """n_planes=1 is the shipped binary path, bit for bit, noisy runs
+    included (same jit, same key layout)."""
+    ref = dima.get_backend("reference", P, CHIP)
+    b1 = dima.get_backend("bitserial", P, CHIP, n_planes=1)
+    for mode in ("dp", "md"):
+        assert_bitwise_parity("matvec", ref, b1, D, Q, mode=mode, key=KEY)
+        assert_bitwise_parity("matmat", ref, b1, D, QS, mode=mode, key=KEY)
+        assert_bitwise_parity("dot", ref, b1, D[0], Q, mode=mode, key=KEY)
+
+
+@pytest.mark.parametrize("n_planes", [2, 4, 8])
+def test_multi_plane_equals_digital_any_v_range(n_planes):
+    """The shifted accumulate telescopes to the exact 8-b dot: bitwise
+    equal to digital (codes AND volts) at zero noise, ideal chip, for
+    default and custom ADC windows."""
+    dig = dima.get_backend("digital", P)
+    bs = dima.get_backend("bitserial", P, None, n_planes=n_planes)
+    for vr in (None, (0.0, 1.0e6 * dima.dp_gain(P)),
+               (100.0 * dima.dp_gain(P), 4.0e6 * dima.dp_gain(P))):
+        assert_bitwise_parity("matvec", dig, bs, D, Q, mode="dp",
+                              v_range=vr, counts=False)
+        assert_bitwise_parity("matmat", dig, bs, D, QS, mode="dp",
+                              v_range=vr, counts=False)
+
+
+def test_md_plane_sum_is_upper_bound():
+    """Per-plane Manhattan accumulation bounds the true 8-b distance
+    from above (equality needs sign-aligned per-plane differences) —
+    the accuracy axis of the tm/knn Pareto rows."""
+    dig = dima.get_backend("digital", P)
+    exact = np.asarray(dima.digital_manhattan(D, Q), np.int64)
+    for n_planes in (2, 4, 8):
+        bs = dima.get_backend("bitserial", P, None, n_planes=n_planes)
+        out = bs.matvec(D, Q, mode="md")
+        approx = np.asarray(out.volts) / dima.md_gain(P) \
+            * P.dims_per_conversion
+        assert (approx >= exact - 1e-3).all()
+    # B=1 (delegation) and the digital md path agree exactly on the bound
+    out1 = dig.matvec(D, Q, mode="md")
+    np.testing.assert_allclose(
+        np.asarray(out1.volts) / dima.md_gain(P) * P.dims_per_conversion,
+        exact, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# dispatch accounting: the plane axis is a real vmap inside ONE jit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_planes", [1, 4, 8])
+def test_multi_plane_matvec_is_one_dispatch(n_planes):
+    bs = dima.get_backend("bitserial", P, CHIP, n_planes=n_planes)
+    bs.matvec(D, Q, mode="dp", key=KEY)          # warm the jit cache
+    with dima.count_dispatches() as c:
+        bs.matvec(D, Q, mode="dp", key=KEY)
+    assert c.n == 1, f"B={n_planes} matvec took {c.n} dispatches"
+
+
+def test_multi_plane_matmat_is_one_dispatch():
+    bs = dima.get_backend("bitserial", P, CHIP, n_planes=4)
+    bs.matmat(D, QS, mode="dp", key=KEY)
+    with dima.count_dispatches() as c:
+        bs.matmat(D, QS, mode="dp", key=KEY)
+    assert c.n == 1
+
+
+def test_conversion_accounting_scales_with_planes():
+    bs = dima.get_backend("bitserial", P, None, n_planes=4)
+    out = bs.matvec(D, Q, mode="dp")
+    assert out.n_conversions == 4 * D.shape[0]
+    out = bs.matmat(D, QS, mode="dp")
+    assert out.n_conversions == 4 * D.shape[0] * QS.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# physical plane path: planes ride the bank-leading kernel grid
+# ---------------------------------------------------------------------------
+
+def test_physical_plane_axis_matches_bank_loop():
+    """One plane-fused launch == per-plane banked launches with the
+    fold_in(key, k) streams — the bank-axis equivalence, reused."""
+    planes = bp.split_planes(D, 4)
+    pvr = cal_mod.plane_v_range(P, "dp", 4)
+    fused = ops_mod.dima_dp_plane_matvec(planes, Q, P, CHIP, KEY, pvr)
+    for k in range(4):
+        loop = ops_mod.dima_dp_banked(np.asarray(planes[k]), Q, P, CHIP,
+                                      jax.random.fold_in(KEY, k), pvr)
+        assert_outs_equal((fused[0][k], fused[1][k]), loop,
+                          volts_atol=1e-7, label=f"plane {k}")
+
+
+def test_physical_backend_single_dispatch_and_shape():
+    phys = dima.get_backend("bitserial", P, CHIP, n_planes=4, physical=True)
+    out = phys.matvec(D, Q, mode="dp", key=KEY)
+    assert out.code.shape == (D.shape[0],)
+    with dima.count_dispatches() as c:
+        phys.matvec(D, Q, mode="dp", key=KEY)
+    assert c.n == 1
+    with pytest.raises(NotImplementedError):
+        phys.matvec(D, Q, mode="md")
+
+
+# ---------------------------------------------------------------------------
+# energy: per-plane billing
+# ---------------------------------------------------------------------------
+
+def test_decision_cost_monotone_and_b1_exact():
+    prev = None
+    for n_planes in (1, 2, 4, 8):
+        be = dima.get_backend("bitserial", P, n_planes=n_planes)
+        c = be.decision_cost(256, mode="dp")
+        if prev is not None:
+            assert c.energy_pj > prev.energy_pj
+            assert c.time_ns > prev.time_ns
+        prev = c
+    c1 = dima.get_backend("bitserial", P, n_planes=1).decision_cost(256)
+    assert c1 == energy_mod.dima_decision(P, 256, "dp")
+
+
+def test_reduced_swing_is_cheaper_but_still_monotone():
+    prev = 0.0
+    for n_planes in (1, 2, 4, 8):
+        full = energy_mod.bitserial_decision(P, 256, "dp", n_planes=n_planes)
+        red = energy_mod.bitserial_decision(P, 256, "dp", n_planes=n_planes,
+                                            full_swing=False)
+        if n_planes == 1:
+            assert full == red                    # s_8 == 1
+        else:
+            assert red.energy_pj < full.energy_pj
+        assert red.energy_pj > prev
+        prev = red.energy_pj
+
+
+def test_sort_billed_once_not_per_plane():
+    c = energy_mod.bitserial_decision(P, 256, "md", n_planes=4, n_ops=64,
+                                      n_sort=64)
+    c0 = energy_mod.bitserial_decision(P, 256, "md", n_planes=4, n_ops=64)
+    assert c.energy_pj - c0.energy_pj == pytest.approx(64 * P.e_sort_pj)
+
+
+def test_weights_energy_per_token_scales_with_planes():
+    """The engine's per-token billing path honors the plane count."""
+    n_active = 1 << 20
+    pj1, banks1 = dima.weights_energy_per_token(
+        n_active, dima.get_backend("bitserial", P, n_planes=1))
+    pj_ref, _ = dima.weights_energy_per_token(
+        n_active, dima.get_backend("reference", P))
+    assert pj1 == pj_ref
+    for n_planes in (2, 4, 8):
+        pj, banks = dima.weights_energy_per_token(
+            n_active, dima.get_backend("bitserial", P, n_planes=n_planes))
+        assert banks == banks1
+        assert pj == pytest.approx(n_planes * pj1)   # full-swing: linear
+
+
+# ---------------------------------------------------------------------------
+# calibration plumbing
+# ---------------------------------------------------------------------------
+
+def test_calibrate_and_chunked_dot_through_bitserial():
+    """>256-dim ops chunk through the same helper as every backend, and
+    range calibration runs on the ideal() clone (keeps n_planes)."""
+    d512 = rng.integers(0, 256, (1, 512), dtype=np.uint8)
+    qs512 = rng.integers(0, 256, (8, 512), dtype=np.uint8)
+    bs = dima.get_backend("bitserial", P, CHIP, n_planes=4)
+    cal = dima.calibrate(bs, d512, qs512, mode="dp")
+    dig = np.asarray(dima.digital_dot(d512, qs512), np.float64)
+    got = np.asarray(dima.chunked_dot(bs, d512, qs512, mode="dp",
+                                      v_range=cal.v_range))
+    # exact linear plane model + chip col_gain: small relative error
+    assert np.abs(got - dig).max() / np.abs(dig).max() < 0.02
+
+
+def test_plane_v_range_scales_with_width():
+    full = cal_mod.plane_v_range(P, "dp", 1)
+    assert full[1] == pytest.approx(255.0 * 255.0 * dima.dp_gain(P))
+    for n_planes in (2, 4, 8):
+        lo, hi = cal_mod.plane_v_range(P, "dp", n_planes)
+        assert lo == 0.0
+        assert hi == pytest.approx(full[1] * bp.plane_scale(n_planes))
+
+
+# ---------------------------------------------------------------------------
+# robust-path dispatch regression (PR 8) — asserted here alongside the
+# plane-path counts so every non-default execution path is guarded
+# ---------------------------------------------------------------------------
+
+def test_robust_redundancy_dispatch_count():
+    """redundancy=R routes matvec through the per-physical-bank loop:
+    one dispatch per (replica, occupied logical bank)."""
+    R, nb = 3, 4
+    mb = dima.get_backend("multibank", P, CHIP, n_banks=nb, redundancy=R)
+    assert mb.robust
+    mb.matvec(D, Q, mode="dp", key=KEY)          # warm
+    n_occupied = len(mb.bank_slices(D.shape[0]))
+    with dima.count_dispatches() as c:
+        mb.matvec(D, Q, mode="dp", key=KEY)
+    assert c.n == R * n_occupied, \
+        f"robust matvec: {c.n} dispatches != R×banks = {R * n_occupied}"
+
+
+def test_robust_matmat_dispatch_count():
+    R, nb = 2, 4
+    mb = dima.get_backend("multibank", P, CHIP, n_banks=nb, redundancy=R)
+    mb.matmat(D, QS, mode="dp", key=KEY)
+    n_occupied = len(mb.bank_slices(D.shape[0]))
+    with dima.count_dispatches() as c:
+        mb.matmat(D, QS, mode="dp", key=KEY)
+    assert c.n == R * n_occupied

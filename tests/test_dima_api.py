@@ -1,10 +1,12 @@
-"""Unified backend API: zero-noise parity across digital / reference /
-pallas, bit-for-bit vectorized-vs-looped matvec, calibration, dispatch."""
+"""Unified backend API: zero-noise parity across every registered
+substrate (the tests/_parity.py matrix), bit-for-bit
+vectorized-vs-looped matvec, calibration, dispatch."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _parity import assert_bitwise_parity, make_pair, parametrize_backends
 from repro import dima
 from repro.core import noise as noise_mod
 from repro.core import pipeline as pl
@@ -21,21 +23,19 @@ KEY = jax.random.PRNGKey(9)
 
 
 # ---------------------------------------------------------------------------
-# zero-noise parity: digital / reference / pallas
+# zero-noise parity: the standing backend matrix (tests/_parity.py)
 # ---------------------------------------------------------------------------
 
+@parametrize_backends()
 @pytest.mark.parametrize("mode", ["dp", "md"])
-def test_reference_pallas_parity_zero_noise(mode):
-    """The analog substrates must agree exactly when no noise is drawn:
-    same codes, allclose volts."""
-    ref = dima.get_backend("reference", P)
-    pal = dima.get_backend("pallas", P)
-    a = ref.matvec(D, Q, mode=mode)
-    b = pal.matvec(D, Q, mode=mode)
-    np.testing.assert_allclose(np.asarray(a.volts), np.asarray(b.volts),
-                               atol=1e-7)
-    np.testing.assert_array_equal(np.asarray(a.code), np.asarray(b.code))
-    assert a.n_cycles == b.n_cycles and a.n_conversions == b.n_conversions
+def test_backend_parity_zero_noise(case, mode):
+    """Every registered substrate must agree with its oracle exactly
+    when no noise is drawn: same codes, bitwise-or-atol volts."""
+    if mode not in case.modes:
+        pytest.skip(f"{case.id} parity pinned for {case.modes} only")
+    ref, ut = make_pair(case, P, CHIP if case.chip else None)
+    assert_bitwise_parity("matvec", ref, ut, D, Q, mode=mode,
+                          volts_atol=case.volts_atol)
 
 
 @pytest.mark.parametrize("mode", ["dp", "md"])
@@ -55,14 +55,16 @@ def test_digital_within_systematic_envelope(mode):
     assert v_gap / fs < (0.045 if mode == "dp" else 0.06)
 
 
+@parametrize_backends()
 @pytest.mark.parametrize("mode", ["dp", "md"])
-def test_matmat_parity_zero_noise(mode):
-    ref = dima.get_backend("reference", P)
-    pal = dima.get_backend("pallas", P)
-    a = ref.matmat(D[:32], QS, mode=mode)
-    b = pal.matmat(D[:32], QS, mode=mode)
-    assert a.code.shape == b.code.shape == (3, 32)
-    np.testing.assert_array_equal(np.asarray(a.code), np.asarray(b.code))
+def test_matmat_parity_zero_noise(case, mode):
+    if mode not in case.modes:
+        pytest.skip(f"{case.id} parity pinned for {case.modes} only")
+    ref, ut = make_pair(case, P, CHIP if case.chip else None)
+    a = ut.matmat(D[:32], QS, mode=mode)
+    assert a.code.shape == (3, 32)
+    assert_bitwise_parity("matmat", ref, ut, D[:32], QS, mode=mode,
+                          volts_atol=case.volts_atol)
 
 
 def test_chip_record_expansion_inside_pallas_backend():

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
+from _parity import assert_outs_equal
 from repro.core import noise as noise_mod
 from repro.core import pipeline as pl_core
 from repro.core.params import DimaParams
@@ -79,11 +80,9 @@ def test_dima_dp_kernel_matches_core(M):
     rng = np.random.default_rng(M)
     D = jnp.asarray(rng.integers(0, 256, (M, 256)), jnp.uint8)
     Q = jnp.asarray(rng.integers(0, 256, (256,)), jnp.uint8)
-    codes, volts = dima_dp_banked(D, Q, P)
     out = pl_core.dima_dot(D.astype(jnp.int32), Q.astype(jnp.int32), P)
-    np.testing.assert_allclose(np.asarray(volts), np.asarray(out.volts),
-                               atol=1e-7)
-    np.testing.assert_array_equal(np.asarray(codes), np.asarray(out.code))
+    assert_outs_equal(dima_dp_banked(D, Q, P), out, volts_atol=1e-7,
+                      label="dp kernel vs core")
 
 
 @pytest.mark.parametrize("M", [64, 128])
@@ -91,11 +90,9 @@ def test_dima_md_kernel_matches_core(M):
     rng = np.random.default_rng(M + 1)
     D = jnp.asarray(rng.integers(0, 256, (M, 256)), jnp.uint8)
     Q = jnp.asarray(rng.integers(0, 256, (256,)), jnp.uint8)
-    codes, volts = dima_md_banked(D, Q, P)
     out = pl_core.dima_manhattan(D.astype(jnp.int32), Q.astype(jnp.int32), P)
-    np.testing.assert_allclose(np.asarray(volts), np.asarray(out.volts),
-                               atol=1e-7)
-    np.testing.assert_array_equal(np.asarray(codes), np.asarray(out.code))
+    assert_outs_equal(dima_md_banked(D, Q, P), out, volts_atol=1e-7,
+                      label="md kernel vs core")
 
 
 def test_dima_dp_kernel_noisy_vs_ref():
@@ -111,9 +108,8 @@ def test_dima_dp_kernel_noisy_vs_ref():
     rn, cn = _expand_noise(key, P, 128, "dp")
     vr = (0.0, 255.0 * 255.0 * pl_core.dp_gain(P))
     codes_r, volts_r = R.dima_dp_ref(D, Q, P, cg, ce, mg, mo, rn, cn, vr)
-    np.testing.assert_allclose(np.asarray(volts_k), np.asarray(volts_r),
-                               atol=1e-7)
-    np.testing.assert_array_equal(np.asarray(codes_k), np.asarray(codes_r))
+    assert_outs_equal((codes_k, volts_k), (codes_r, volts_r),
+                      volts_atol=1e-7, label="noisy kernel vs ref")
 
 
 # ---------------------------------------------------------------------------

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _parity import assert_bitwise_parity, assert_outs_equal
 from repro import dima
 from repro.core import energy as en
 from repro.core import noise as noise_mod
@@ -44,12 +45,9 @@ def test_matvec_is_digital_merge_of_bank_runs(mode):
     parts = [ref.matvec(D[a:z], Q, mode=mode,
                         key=jax.random.fold_in(KEY, b))
              for b, (a, z) in enumerate(mb.bank_slices(D.shape[0]))]
-    np.testing.assert_array_equal(
-        np.asarray(out.code),
-        np.concatenate([np.asarray(o.code) for o in parts]))
-    np.testing.assert_array_equal(
-        np.asarray(out.volts),
-        np.concatenate([np.asarray(o.volts) for o in parts]))
+    merged = (np.concatenate([np.asarray(o.code) for o in parts]),
+              np.concatenate([np.asarray(o.volts) for o in parts]))
+    assert_outs_equal(out, merged, label="digital merge")
     unbanked = ref.matvec(D, Q, mode=mode)
     assert out.n_cycles == unbanked.n_cycles
     assert out.n_conversions == unbanked.n_conversions
@@ -79,12 +77,10 @@ def test_nbanks1_parity_with_reference():
     with noise, bank 0's stream is fold_in(key, 0) by construction."""
     mb = dima.get_backend("multibank", P, CHIP, n_banks=1)
     ref = dima.get_backend("reference", P, CHIP)
-    a, b = mb.matvec(D, Q), ref.matvec(D, Q)
-    np.testing.assert_array_equal(np.asarray(a.code), np.asarray(b.code))
-    np.testing.assert_array_equal(np.asarray(a.volts), np.asarray(b.volts))
+    assert_bitwise_parity("matvec", ref, mb, D, Q, counts=True)
     n = mb.matvec(D, Q, key=KEY)
     r = ref.matvec(D, Q, key=jax.random.fold_in(KEY, 0))
-    np.testing.assert_array_equal(np.asarray(n.code), np.asarray(r.code))
+    assert_outs_equal(n, r, counts=False, label="fold_in(key, 0) stream")
 
 
 @pytest.mark.parametrize("m,n_banks", [(50, 8), (5, 8), (200, 7)])
@@ -152,22 +148,12 @@ def test_fused_matches_loop_bitwise(mode, m, n_banks):
     loop = dima.get_backend("multibank", P, CHIP, n_banks=n_banks,
                             fused=False)
     for key in (None, KEY):
-        a = fused.matvec(D[:m], Q, mode=mode, key=key)
-        b = loop.matvec(D[:m], Q, mode=mode, key=key)
-        np.testing.assert_array_equal(np.asarray(a.code), np.asarray(b.code))
-        np.testing.assert_array_equal(np.asarray(a.volts),
-                                      np.asarray(b.volts))
-        assert (a.n_cycles, a.n_conversions) == (b.n_cycles,
-                                                 b.n_conversions)
+        assert_bitwise_parity("matvec", loop, fused, D[:m], Q, mode=mode,
+                              key=key, counts=True)
         am = fused.matmat(D[:m], QS, mode=mode, key=key)
-        bm = loop.matmat(D[:m], QS, mode=mode, key=key)
         assert am.code.shape == (3, m)
-        np.testing.assert_array_equal(np.asarray(am.code),
-                                      np.asarray(bm.code))
-        np.testing.assert_array_equal(np.asarray(am.volts),
-                                      np.asarray(bm.volts))
-        assert (am.n_cycles, am.n_conversions) == (bm.n_cycles,
-                                                   bm.n_conversions)
+        assert_bitwise_parity("matmat", loop, fused, D[:m], QS, mode=mode,
+                              key=key, counts=True)
 
 
 @pytest.mark.parametrize("mode", ["dp", "md"])
@@ -183,18 +169,12 @@ def test_fused_pallas_inner_matches_loop(mode, m, n_banks):
     loop = dima.get_backend("multibank", P, CHIP, inner="pallas",
                             n_banks=n_banks, fused=False)
     for key in (None, KEY):
-        a = fused.matvec(D[:m], Q, mode=mode, key=key)
-        b = loop.matvec(D[:m], Q, mode=mode, key=key)
-        np.testing.assert_array_equal(np.asarray(a.code), np.asarray(b.code))
-        np.testing.assert_allclose(np.asarray(a.volts), np.asarray(b.volts),
-                                   atol=1e-7)
+        assert_bitwise_parity("matvec", loop, fused, D[:m], Q, mode=mode,
+                              key=key, volts_atol=1e-7, counts=False)
         am = fused.matmat(D[:m], QS, mode=mode, key=key)
-        bm = loop.matmat(D[:m], QS, mode=mode, key=key)
         assert am.code.shape == (3, m)
-        np.testing.assert_array_equal(np.asarray(am.code),
-                                      np.asarray(bm.code))
-        np.testing.assert_allclose(np.asarray(am.volts),
-                                   np.asarray(bm.volts), atol=1e-7)
+        assert_bitwise_parity("matmat", loop, fused, D[:m], QS, mode=mode,
+                              key=key, volts_atol=1e-7, counts=False)
 
 
 def test_fused_dispatch_counts():
