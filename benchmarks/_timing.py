@@ -1,0 +1,45 @@
+"""Shared wall-clock timing protocol for every benchmark in this tree.
+
+Each bench used to hand-roll its own warmup + loop + divide; the
+subtle parts (jit warm-up BEFORE the clock starts, ``block_until_ready``
+inside the timed region, median instead of mean so one GC pause or
+thermal blip cannot skew a persisted crossover) now live here once.
+
+* ``time_us(fn, warmup=1, k=5)`` — µs per call, median of ``k`` timed
+  calls after ``warmup`` untimed ones.  ``fn`` must itself synchronize
+  (call ``.block_until_ready()`` on its result) — the helper cannot know
+  which output to block on.
+* ``timed(fn, warmup=1, k=1)`` — ``(last_result, us)`` for benches that
+  also want the value.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+
+def time_us(fn, *, warmup: int = 1, k: int = 5) -> float:
+    """Median µs per call over ``k`` timed calls, after ``warmup``
+    untimed (jit-compiling) ones."""
+    for _ in range(warmup):
+        fn()
+    samples = []
+    for _ in range(k):
+        t0 = time.perf_counter()
+        fn()
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(samples)
+
+
+def timed(fn, *, warmup: int = 1, k: int = 1):
+    """``(result, us_per_call)``: the last call's return value plus the
+    median-of-``k`` timing (same protocol as ``time_us``)."""
+    for _ in range(warmup):
+        fn()
+    samples = []
+    out = None
+    for _ in range(k):
+        t0 = time.perf_counter()
+        out = fn()
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return out, statistics.median(samples)

@@ -2,12 +2,11 @@
 unified-API matvec benchmark (looped seed path vs vectorized backend)."""
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._timing import time_us, timed  # noqa: F401  (re-export)
 from repro import dima as dima_api
 from repro.core import energy as en
 from repro.core import noise as noise_mod
@@ -96,16 +95,15 @@ def bench_matvec_api(m=4096, m_loop=64, n=256, n_iters=3):
     Q = jnp.asarray(rng.integers(0, 256, (n,)))
     be = dima_api.get_backend("reference", P)
 
-    be.matvec(D, Q, key=KEY).code.block_until_ready()      # jit warm-up
-    t0 = time.perf_counter()
-    for _ in range(n_iters):
-        be.matvec(D, Q, key=KEY).code.block_until_ready()
-    vec_us = (time.perf_counter() - t0) / n_iters * 1e6
+    vec_us = time_us(
+        lambda: be.matvec(D, Q, key=KEY).code.block_until_ready(),
+        k=n_iters)
 
     pl.dima_matvec_loop(D[:1], Q, P, None, KEY).code.block_until_ready()
-    t0 = time.perf_counter()
-    pl.dima_matvec_loop(D[:m_loop], Q, P, None, KEY).code.block_until_ready()
-    loop_us_small = (time.perf_counter() - t0) * 1e6
+    loop_us_small = time_us(
+        lambda: pl.dima_matvec_loop(D[:m_loop], Q, P, None,
+                                    KEY).code.block_until_ready(),
+        warmup=0, k=1)
     loop_us = loop_us_small * m / m_loop                   # linear in rows
     return {"m": m, "n": n,
             "vectorized_us_per_call": round(vec_us, 1),
@@ -114,16 +112,14 @@ def bench_matvec_api(m=4096, m_loop=64, n=256, n_iters=3):
             "speedup_x": round(loop_us / vec_us, 1)}
 
 
-def _time_matvec(be, D, Q, n_iters):
+def _time_matvec(be, D, Q, n_iters, **kwargs):
     """The one post-jit matvec timing protocol (µs/call): warm up once,
-    then average ``n_iters`` timed calls — shared by every bench here so
-    the persisted crossover and the multibank comparison stay
-    comparable."""
-    be.matvec(D, Q, key=KEY).code.block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(n_iters):
-        be.matvec(D, Q, key=KEY).code.block_until_ready()
-    return (time.perf_counter() - t0) / n_iters * 1e6
+    median of ``n_iters`` timed calls (``benchmarks._timing``) — shared
+    by every bench here so the persisted crossover and the multibank
+    comparison stay comparable."""
+    return time_us(
+        lambda: be.matvec(D, Q, key=KEY, **kwargs).code.block_until_ready(),
+        k=n_iters)
 
 
 def _count_matvec_dispatches(be, D, Q):
@@ -171,6 +167,46 @@ def bench_multibank(m=4096, n=256, n_banks=None, n_iters=3):
             "decisions_per_s_modeled": round(cm.throughput_dec_s)}
 
 
+def bench_fused_epilogue(m=4096, n=256, n_banks=32, n_iters=5):
+    """The flagship fused-epilogue op: a (m, n) DP matvec through the
+    ``n_banks``-bank fused Pallas path with the calibration trim fused
+    into the SAME kernel launch (``trim=`` → ``DimaOut.trimmed``) vs the
+    separate-ops baseline (matvec launch, then decode + affine trim as
+    their own XLA ops on the codes).  Reports both µs/call (median,
+    post-jit), the delta, and the fused path's dispatch count — which
+    must be exactly 1 (asserted by benchmarks/run.py and CI)."""
+    rng = np.random.default_rng(3)
+    D = jnp.asarray(rng.integers(0, 256, (m, n)))
+    Q = jnp.asarray(rng.integers(0, 256, (n,)))
+    trim = np.asarray([0.98, -0.5, 3.0], np.float32)
+    be = dima_api.get_backend("multibank", P, n_banks=n_banks)
+
+    fused_us = time_us(
+        lambda: be.matvec(D, Q, key=KEY,
+                          trim=trim).trimmed.block_until_ready(),
+        k=n_iters)
+
+    q_sum = float(np.asarray(Q, np.float64).sum())
+
+    def separate():
+        out = be.matvec(D, Q, key=KEY)
+        dec = be.decode(out.code)
+        y = (trim[0] * dec + trim[1] * q_sum) + trim[2]
+        return y.block_until_ready()
+
+    separate_us = time_us(separate, k=n_iters)
+
+    be.matvec(D, Q, key=KEY, trim=trim).trimmed.block_until_ready()
+    with dima_api.count_dispatches() as c:
+        be.matvec(D, Q, key=KEY, trim=trim).trimmed.block_until_ready()
+
+    return {"m": m, "n": n, "n_banks": be.n_banks,
+            "fused_us_per_call": round(fused_us, 1),
+            "separate_us_per_call": round(separate_us, 1),
+            "delta_us": round(separate_us - fused_us, 1),
+            "fused_dispatches": c.n}
+
+
 def bench_auto_crossover(row_counts=(16, 32, 64, 128, 256, 512), n_iters=5):
     """Measure the reference↔pallas wall-clock crossover over stored-row
     counts; the smallest count where the Pallas path wins becomes
@@ -189,8 +225,9 @@ def bench_auto_crossover(row_counts=(16, 32, 64, 128, 256, 512), n_iters=5):
                      "pallas_us": round(_time_matvec(pal, D, Q,
                                                      n_iters), 1)})
     # the crossover is a property of the platform (interpret-mode Pallas
-    # on CPU vs native lowering on TPU): tag it so AutoBackend ignores a
-    # measurement taken elsewhere
+    # on CPU vs native lowering on TPU): run.py persists it under the
+    # platform-keyed ``crossover`` section so measurements from several
+    # platforms coexist; the legacy flat tag pair stays for old readers
     return {"sweep": rows, "auto_crossover_rows": stable_crossover(rows),
             "auto_crossover_platform": jax.default_backend()}
 
@@ -221,11 +258,3 @@ def stable_crossover(rows):
         if r["pallas_us"] < r["reference_us"] and losses_above <= 1:
             return r["rows"]
     return "never"
-
-
-def timed(fn, n=3):
-    fn()
-    t0 = time.perf_counter()
-    for _ in range(n):
-        r = fn()
-    return r, (time.perf_counter() - t0) / n * 1e6

@@ -13,7 +13,8 @@ real measurements with toy-size numbers).
 Row schema (one per (B, app)): ``n_planes``, ``plane_bits``, ``app``,
 ``acc_dima``, ``acc_digital``, ``energy_pj`` / ``energy_mb_pj``
 (``energy.bitserial_app_cost``, single-/multi-bank), ``time_ns``, plus
-the sweep-level ``platform`` tag.
+the sweep-level ``platform`` tag and ``timings`` (measured matvec
+µs/call per plane count, ``benchmarks._timing`` protocol).
 
 Hard guards (RuntimeError, CI-visible):
  * the B=1 row is *bitwise-identical* to the shipped binary path — a
@@ -29,11 +30,14 @@ import json
 import os
 import sys
 
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+from benchmarks._timing import time_us  # noqa: E402
 from repro import dima  # noqa: E402
 from repro.core import applications as app_mod  # noqa: E402
 from repro.core import energy as energy_mod  # noqa: E402
@@ -63,11 +67,28 @@ def check_binary_parity(p: DimaParams) -> None:
                 f"describes the shipped behavior")
 
 
+def _time_plane_matvec(p: DimaParams, n_planes: int, m=256,
+                       n_iters=3) -> float:
+    """Measured µs/call for an (m, 256) matvec at this plane count
+    (``benchmarks._timing`` protocol) — the wall-clock companion to the
+    modeled ``time_ns`` column."""
+    rng = np.random.default_rng(4)
+    D = jnp.asarray(rng.integers(0, 256, (m, 256)))
+    Q = jnp.asarray(rng.integers(0, 256, (256,)))
+    be = dima.get_backend("bitserial", p, n_planes=n_planes)
+    return time_us(
+        lambda: be.matvec(D, Q).code.block_until_ready(), k=n_iters)
+
+
 def sweep(p: DimaParams, smoke: bool = False) -> dict:
     apps = {"mf"} if smoke else None
     planes = (1, 8) if smoke else PLANE_COUNTS
     rows = []
+    timings = []
     for n_planes in planes:
+        timings.append({"n_planes": n_planes,
+                        "matvec_us": round(
+                            _time_plane_matvec(p, n_planes), 1)})
         results = app_mod.run_all(p, backend="bitserial",
                                   backend_kwargs={"n_planes": n_planes},
                                   apps=apps)
@@ -94,7 +115,8 @@ def sweep(p: DimaParams, smoke: bool = False) -> dict:
                 f"per-plane energy model not monotone for {row['app']}: "
                 f"B={row['n_planes']} costs {row['energy_pj']} pJ ≤ {prev}")
         by_app[row["app"]] = row["energy_pj"]
-    return {"platform": jax.devices()[0].platform, "rows": rows}
+    return {"platform": jax.devices()[0].platform, "rows": rows,
+            "timings": timings}
 
 
 def write_json(sweep_result: dict, smoke: bool = False) -> str:

@@ -13,9 +13,14 @@ multibank matvec issues exactly ONE compiled-computation launch
 per-bank loop silently regressing the shipped path.
 
 BENCH_dima_api.json carries, besides the loop-vs-vectorized matvec
-numbers, the single-bank vs multibank comparison (``multibank``) and the
-measured reference↔pallas crossover (``auto_crossover_rows``) that
-``repro.dima.get_backend("auto")`` picks up on the next run.
+numbers, the single-bank vs multibank comparison (``multibank``), the
+platform-keyed ``crossover`` section (reference↔pallas crossover per
+``jax.default_backend()`` — the entry ``repro.dima.get_backend("auto")``
+reads on the next run; the legacy flat ``auto_crossover_rows`` tag pair
+is still written for old readers) and the platform-keyed ``kernels``
+section (the fused-epilogue vs separate-ops comparison).  Platform
+sections deep-merge on write: a CPU run updates ``crossover["cpu"]``
+without clobbering a TPU measurement sitting next to it.
 BENCH_serving.json (bench_serving.py) carries the continuous-engine vs
 sequential-oracle comparison, and the ``analog_lm`` key of
 BENCH_dima_api.json (bench_lm_analog.py, merged read-modify-write) the
@@ -26,15 +31,16 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
+
+from benchmarks._timing import timed as _shared_timed
+
+#: platform-keyed sections of BENCH_dima_api.json — merged per platform
+#: on write instead of replaced wholesale
+_PLATFORM_SECTIONS = ("crossover", "kernels")
 
 
 def _timed(fn):
-    fn()                               # warm up (jit)
-    t0 = time.perf_counter()
-    out = fn()
-    us = (time.perf_counter() - t0) * 1e6
-    return out, us
+    return _shared_timed(fn, warmup=1, k=1)
 
 
 def main(argv=None) -> None:
@@ -112,11 +118,33 @@ def main(argv=None) -> None:
             f"n_banks={mb['n_banks']} — the dispatch counter or the "
             f"oracle changed meaning (full record: {mb})")
 
+    fe = bench_dima.bench_fused_epilogue(
+        **({"m": 512, "n_banks": 8} if args.smoke else {}))
+    rows.append(("dima_fused_epilogue", fe["fused_us_per_call"],
+                 f"separate={fe['separate_us_per_call']}us;"
+                 f"delta={fe['delta_us']}us;"
+                 f"dispatches={fe['fused_dispatches']}"))
+    # the flagship guard: the trimmed matvec with the calibration
+    # epilogue fused must still be ONE compiled-computation launch —
+    # platform-independent, asserted in CI via --smoke
+    if fe["fused_dispatches"] != 1:
+        raise RuntimeError(
+            f"fused-epilogue matvec issued {fe['fused_dispatches']} "
+            f"dispatches, expected 1 — the trim epilogue fell out of the "
+            f"kernel launch (full record: {fe})")
+
     cross = bench_dima.bench_auto_crossover(
         row_counts=(32, 128) if args.smoke else (16, 32, 64, 128, 256, 512))
+    platform = cross["auto_crossover_platform"]
+    api["crossover"] = {platform: {
+        "rows": cross["auto_crossover_rows"],
+        "sweep": cross["sweep"],
+    }}
+    api["kernels"] = {platform: {"fused_epilogue": fe}}
+    # legacy flat tags, still consumed by pre-platform-section readers
     api["auto_crossover"] = cross["sweep"]
     api["auto_crossover_rows"] = cross["auto_crossover_rows"]
-    api["auto_crossover_platform"] = cross["auto_crossover_platform"]
+    api["auto_crossover_platform"] = platform
     rows.append(("dima_auto_crossover", 0,
                  f"min_rows={cross['auto_crossover_rows']}"))
 
@@ -156,6 +184,14 @@ def main(argv=None) -> None:
                 merged = json.load(f)
         except (OSError, ValueError):
             merged = {}
+    # platform-keyed sections merge per platform (a CPU run must not
+    # clobber the TPU crossover measured elsewhere); everything else is
+    # replaced wholesale as before
+    for sect in _PLATFORM_SECTIONS:
+        prior = merged.get(sect)
+        if sect in api and isinstance(prior, dict):
+            prior.update(api[sect])
+            api[sect] = prior
     merged.update(api)
     with open(path, "w") as f:
         json.dump(merged, f, indent=1)

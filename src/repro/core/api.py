@@ -128,6 +128,25 @@ def _check_op_dims(n: int, p: DimaParams) -> None:
             f"(got n={n}); split long vectors with chunked_dot")
 
 
+def _trim_coef(trim):
+    """Normalize a ``trim=`` argument to the (3,) f32 coefficient operand
+    the jitted bodies take (None passes through — structure keys the jit
+    cache, so no static flag is needed)."""
+    return (None if trim is None
+            else jnp.asarray(trim, jnp.float32).reshape(3))
+
+
+def _trim_eager(code, query, coef, p, v_range, mode, per_query=False):
+    """Host-side fused-epilogue fallback for paths that have no jitted
+    body of their own (digital, the robust per-bank loop): one
+    ``pipeline.trim_epilogue`` over the emitted codes.  ``per_query``
+    reshapes Σq to (b, 1) so it broadcasts against (b, m) matmat codes."""
+    q_sum = jnp.asarray(query).astype(jnp.float32).sum(-1)
+    if per_query:
+        q_sum = q_sum[:, None]
+    return pl.trim_epilogue(code, q_sum, coef, p, v_range, mode)
+
+
 class DimaBackend:
     """Base class / protocol for one compute substrate.
 
@@ -154,34 +173,43 @@ class DimaBackend:
         return type(self)(self.p, None)
 
     # -- the one signature --------------------------------------------------
+    #
+    # ``trim=(c0, c1, c2)`` on any op switches on the fused calibration
+    # epilogue: the op additionally returns ``DimaOut.trimmed``, the
+    # affine-trimmed score ``c0·d̂ + c1·Σq + c2`` (pipeline.trim_epilogue)
+    # computed inside the op's own launch/jit wherever the substrate has
+    # one.  Codes/volts (and dispatch counts) are unchanged by ``trim``.
 
     def dot(self, stored, query, *, mode="dp", key=None,
-            v_range=None) -> DimaOut:
+            v_range=None, trim=None) -> DimaOut:
         """One ≤256-dim op per trailing dim; leading dims broadcast."""
         raise NotImplementedError
 
     def manhattan(self, stored, query, *, mode="md", key=None,
-                  v_range=None) -> DimaOut:
-        return self.dot(stored, query, mode=mode, key=key, v_range=v_range)
+                  v_range=None, trim=None) -> DimaOut:
+        return self.dot(stored, query, mode=mode, key=key, v_range=v_range,
+                        trim=trim)
 
     def matvec(self, stored, query, *, mode="dp", key=None,
-               v_range=None) -> DimaOut:
+               v_range=None, trim=None) -> DimaOut:
         """All stored rows (m, n≤256) against one query (n,)."""
         raise NotImplementedError
 
     def matmat(self, stored, queries, *, mode="dp", key=None,
-               v_range=None) -> DimaOut:
+               v_range=None, trim=None) -> DimaOut:
         """stored (m, n) × queries (b, n) -> codes (b, m); per-query keys
         are ``jax.random.split(key, b)`` on every backend."""
         queries = jnp.asarray(queries)
         b = queries.shape[0]
         keys = (jax.random.split(key, b) if key is not None else [None] * b)
         outs = [self.matvec(stored, queries[j], mode=mode, key=keys[j],
-                            v_range=v_range) for j in range(b)]
+                            v_range=v_range, trim=trim) for j in range(b)]
+        trimmed = (None if trim is None
+                   else jnp.stack([o.trimmed for o in outs]))
         return DimaOut(jnp.stack([o.code for o in outs]),
                        jnp.stack([o.volts for o in outs]),
                        sum(o.n_cycles for o in outs),
-                       sum(o.n_conversions for o in outs))
+                       sum(o.n_conversions for o in outs), trimmed)
 
     # -- decode / cost ------------------------------------------------------
 
@@ -256,7 +284,7 @@ class DigitalBackend(DimaBackend):
         return (0.0, full * self._gain(mode))
 
     def dot(self, stored, query, *, mode="dp", key=None,
-            v_range=None) -> DimaOut:
+            v_range=None, trim=None) -> DimaOut:
         _check_mode(mode)
         exact_f = pl.digital_dot if mode == "dp" else pl.digital_manhattan
         exact = exact_f(stored, query)
@@ -267,14 +295,16 @@ class DigitalBackend(DimaBackend):
         if v_range is None:
             v_range = self._default_range(mode)
         code = adc_mod.adc(v, v_range[0], v_range[1], self.p)
-        return DimaOut(code, v, pl._cycles_per_op(n, self.p), 1)
+        trimmed = (None if trim is None
+                   else _trim_eager(code, query, trim, self.p, v_range, mode))
+        return DimaOut(code, v, pl._cycles_per_op(n, self.p), 1, trimmed)
 
     def matvec(self, stored, query, *, mode="dp", key=None,
-               v_range=None) -> DimaOut:
+               v_range=None, trim=None) -> DimaOut:
         stored = jnp.asarray(stored)
         m = stored.shape[0]
-        out = self.dot(stored, query, mode=mode, v_range=v_range)
-        return DimaOut(out.code, out.volts, m * out.n_cycles, m)
+        out = self.dot(stored, query, mode=mode, v_range=v_range, trim=trim)
+        return DimaOut(out.code, out.volts, m * out.n_cycles, m, out.trimmed)
 
     def decision_cost(self, n_dims: int, *, mode="dp", n_ops=1,
                       multi_bank=False, **kw) -> energy_mod.Cost:
@@ -298,54 +328,70 @@ class ReferenceBackend(DimaBackend):
         self._jit = {}
 
     def _fn(self, kind, mode):
+        """Per-(op, mode) jitted body; a trailing ``coef`` operand (None
+        or the (3,) trim coefficients — argument *structure* keys the jit
+        cache) appends the fused calibration epilogue inside the same
+        jit, so ``trim=`` costs zero extra dispatches."""
         _check_mode(mode)
         k = (kind, mode)
         if k not in self._jit:
-            if kind == "op":
-                f = pl.dima_dot if mode == "dp" else pl.dima_manhattan
-                self._jit[k] = jax.jit(
-                    lambda s, q, chip, key, vr: f(s, q, self.p, chip, key,
-                                                  vr)[:2])
-            elif kind == "matmat":
-                self._jit[k] = jax.jit(
-                    lambda s, q, chip, key, vr: pl.dima_matmat(
-                        s, q, self.p, chip, key, mode, vr))
-            else:
-                self._jit[k] = jax.jit(
-                    lambda s, q, chip, key, vr: pl.dima_matvec(
-                        s, q, self.p, chip, key, mode, vr)[:2])
+            p = self.p
+
+            def run(s, q, chip, key, vr, coef):
+                if kind == "op":
+                    f = pl.dima_dot if mode == "dp" else pl.dima_manhattan
+                    code, volts = f(s, q, p, chip, key, vr)[:2]
+                    qs = jnp.asarray(q).astype(jnp.float32).sum(-1)
+                elif kind == "matmat":
+                    code, volts = pl.dima_matmat(s, q, p, chip, key, mode,
+                                                 vr)
+                    qs = jnp.asarray(q).astype(jnp.float32).sum(-1)[:, None]
+                else:
+                    code, volts = pl.dima_matvec(s, q, p, chip, key, mode,
+                                                 vr)[:2]
+                    qs = jnp.asarray(q).astype(jnp.float32).sum(-1)
+                if coef is None:
+                    return code, volts
+                return code, volts, pl.trim_epilogue(code, qs, coef, p, vr,
+                                                     mode)
+
+            self._jit[k] = jax.jit(run)
         return self._jit[k]
 
     def dot(self, stored, query, *, mode="dp", key=None,
-            v_range=None) -> DimaOut:
+            v_range=None, trim=None) -> DimaOut:
         stored = jnp.asarray(stored)
         query = jnp.asarray(query)
         n = max(stored.shape[-1], query.shape[-1])
         _check_op_dims(n, self.p)
-        code, volts = _dispatch(lambda: self._fn("op", mode)(
-            stored, query, self.chip, key, v_range))
-        return DimaOut(code, volts, pl._cycles_per_op(n, self.p), 1)
+        out = _dispatch(lambda: self._fn("op", mode)(
+            stored, query, self.chip, key, v_range, _trim_coef(trim)))
+        return DimaOut(out[0], out[1], pl._cycles_per_op(n, self.p), 1,
+                       out[2] if len(out) == 3 else None)
 
     def matvec(self, stored, query, *, mode="dp", key=None,
-               v_range=None) -> DimaOut:
+               v_range=None, trim=None) -> DimaOut:
         stored = jnp.asarray(stored)
         m = stored.shape[0]
         _check_op_dims(stored.shape[-1], self.p)
-        code, volts = _dispatch(lambda: self._fn("matvec", mode)(
-            stored, jnp.asarray(query), self.chip, key, v_range))
-        return DimaOut(code, volts,
-                       m * pl._cycles_per_op(stored.shape[-1], self.p), m)
+        out = _dispatch(lambda: self._fn("matvec", mode)(
+            stored, jnp.asarray(query), self.chip, key, v_range,
+            _trim_coef(trim)))
+        return DimaOut(out[0], out[1],
+                       m * pl._cycles_per_op(stored.shape[-1], self.p), m,
+                       out[2] if len(out) == 3 else None)
 
     def matmat(self, stored, queries, *, mode="dp", key=None,
-               v_range=None) -> DimaOut:
+               v_range=None, trim=None) -> DimaOut:
         stored = jnp.asarray(stored)
         queries = jnp.asarray(queries)
         b, m = queries.shape[0], stored.shape[0]
         _check_op_dims(stored.shape[-1], self.p)
         n_cycles = b * m * pl._cycles_per_op(stored.shape[-1], self.p)
-        code, volts = _dispatch(lambda: self._fn("matmat", mode)(
-            stored, queries, self.chip, key, v_range))
-        return DimaOut(code, volts, n_cycles, b * m)
+        out = _dispatch(lambda: self._fn("matmat", mode)(
+            stored, queries, self.chip, key, v_range, _trim_coef(trim)))
+        return DimaOut(out[0], out[1], n_cycles, b * m,
+                       out[2] if len(out) == 3 else None)
 
 
 # ---------------------------------------------------------------------------
@@ -387,7 +433,7 @@ class PallasBackend(DimaBackend):
                 f"get_backend('reference') (or 'auto', which routes "
                 f"unsupported modes there) for this op")
 
-    def _banked(self, stored, query, mode, key, v_range):
+    def _banked(self, stored, query, mode, key, v_range, trim=None):
         from repro.kernels import ops as kops
         self._require_kernel_mode(mode)
         stored = jnp.asarray(stored)
@@ -398,10 +444,10 @@ class PallasBackend(DimaBackend):
         f = kops.dima_dp_banked if mode == "dp" else kops.dima_md_banked
         return _dispatch(lambda: f(
             d.astype(jnp.uint8), q.astype(jnp.uint8), self.p, self.chip,
-            key, v_range, interpret=self.interpret))
+            key, v_range, interpret=self.interpret, trim=trim))
 
     def dot(self, stored, query, *, mode="dp", key=None,
-            v_range=None) -> DimaOut:
+            v_range=None, trim=None) -> DimaOut:
         """Decomposes onto the banked kernels.  Besides (n,)/(m, n) × (n,),
         the two broadcast layouts the applications/calibration use are
         routed through matmat: one stored row × a query batch
@@ -411,23 +457,29 @@ class PallasBackend(DimaBackend):
         stored = jnp.asarray(stored)
         query = jnp.asarray(query)
         per_op = pl._cycles_per_op(stored.shape[-1], self.p)
+
+        def _sl(t, idx):
+            return None if t is None else t[idx]
+
         if stored.ndim == 1:
             out = self.matvec(stored[None, :], query, mode=mode, key=key,
-                              v_range=v_range)
-            return DimaOut(out.code[0], out.volts[0], per_op, 1)
+                              v_range=v_range, trim=trim)
+            return DimaOut(out.code[0], out.volts[0], per_op, 1,
+                           _sl(out.trimmed, 0))
         if stored.ndim == 2 and query.ndim == 1:
             out = self.matvec(stored, query, mode=mode, key=key,
-                              v_range=v_range)
-            return DimaOut(out.code, out.volts, per_op, 1)
+                              v_range=v_range, trim=trim)
+            return DimaOut(out.code, out.volts, per_op, 1, out.trimmed)
         if stored.ndim == 2 and stored.shape[0] == 1 and query.ndim == 2:
             out = self.matmat(stored, query, mode=mode, key=key,
-                              v_range=v_range)
-            return DimaOut(out.code[:, 0], out.volts[:, 0], per_op, 1)
+                              v_range=v_range, trim=trim)
+            return DimaOut(out.code[:, 0], out.volts[:, 0], per_op, 1,
+                           _sl(out.trimmed, (slice(None), 0)))
         if (stored.ndim == 3 and stored.shape[0] == 1 and query.ndim == 3
                 and query.shape[1] == 1):
             out = self.matmat(stored[0], query[:, 0, :], mode=mode, key=key,
-                              v_range=v_range)
-            return DimaOut(out.code, out.volts, per_op, 1)
+                              v_range=v_range, trim=trim)
+            return DimaOut(out.code, out.volts, per_op, 1, out.trimmed)
         raise ValueError(
             f"pallas backend supports stored (n,)/(m, n) × query (n,), "
             f"(1, n) × (B, n), or (1, m, n) × (b, 1, n); got "
@@ -435,18 +487,19 @@ class PallasBackend(DimaBackend):
             "for general broadcasts")
 
     def matvec(self, stored, query, *, mode="dp", key=None,
-               v_range=None) -> DimaOut:
+               v_range=None, trim=None) -> DimaOut:
         stored = jnp.asarray(stored)
         if stored.ndim != 2:
             raise ValueError(f"matvec wants stored (m, n); got "
                              f"{stored.shape}")
         m = stored.shape[0]
-        codes, volts = self._banked(stored, query, mode, key, v_range)
-        return DimaOut(codes, volts,
-                       m * pl._cycles_per_op(stored.shape[-1], self.p), m)
+        out = self._banked(stored, query, mode, key, v_range, trim)
+        return DimaOut(out[0], out[1],
+                       m * pl._cycles_per_op(stored.shape[-1], self.p), m,
+                       out[2] if len(out) == 3 else None)
 
     def matmat(self, stored, queries, *, mode="dp", key=None,
-               v_range=None) -> DimaOut:
+               v_range=None, trim=None) -> DimaOut:
         """ONE kernel launch for the whole (b, m) code matrix: the query
         batch rides the first grid axis (kernels/ops.py matmat wrappers)
         instead of the base class's per-query Python loop.  Per-query keys
@@ -466,12 +519,12 @@ class PallasBackend(DimaBackend):
         d = pl._pad_to_conversion(stored.astype(jnp.int32), self.p)
         q = pl._pad_to_conversion(queries.astype(jnp.int32), self.p)
         f = kops.dima_dp_matmat if mode == "dp" else kops.dima_md_matmat
-        codes, volts = _dispatch(lambda: f(
+        out = _dispatch(lambda: f(
             d.astype(jnp.uint8), q.astype(jnp.uint8), self.p, self.chip,
-            key, v_range, interpret=self.interpret))
-        return DimaOut(codes, volts,
+            key, v_range, interpret=self.interpret, trim=trim))
+        return DimaOut(out[0], out[1],
                        b * m * pl._cycles_per_op(stored.shape[-1], self.p),
-                       b * m)
+                       b * m, out[2] if len(out) == 3 else None)
 
 
 # ---------------------------------------------------------------------------
@@ -537,12 +590,20 @@ class MultiBankBackend(DimaBackend):
 
     Mesh fan-out: pass ``mesh`` (a ``jax.sharding.Mesh`` with a ``banks``
     axis, see ``distributed.sharding.bank_mesh``, or a ``ShardCtx``) and
-    matvec/matmat run as one ``shard_map`` over the bank axis — each
-    device vmaps the same per-bank core over its local banks and the
-    merge is the sharded-to-replicated gather.  The mesh path requires
-    the row count to divide ``n_banks`` (no ragged last bank across
-    devices) and always runs the reference pipeline per shard
-    (Pallas-in-shard_map is a TPU-only upgrade).
+    matvec/matmat run as one ``shard_map`` over the bank axis.  With the
+    default ``reference`` inner each device vmaps the same per-bank core
+    over its local banks; with a ``pallas`` inner each device runs ONE
+    banked kernel launch (kernels/ops.py ``*_bank_*``) over its local
+    banks — the kernel-only device path, so an accelerator shard never
+    falls back to the jnp pipeline.  Both use ``bank_offset = axis_index
+    * local_banks`` to resume the ``fold_in(key, b)`` streams where the
+    previous shard stopped, so ADC codes are bitwise equal to the host
+    fused path bank-for-bank (the oracle; volts and the fused trimmed
+    output agree to the float-assembly tolerance — interpret-mode Pallas
+    compiles through XLA, which may reassociate by ~1 ulp across
+    program contexts).  The merge is the
+    sharded-to-replicated gather.  The mesh path requires the row count
+    to divide ``n_banks`` (no ragged last bank across devices).
 
     Fleet robustness (all off by default — a default-constructed backend
     is bitwise-identical to the seed):
@@ -596,14 +657,13 @@ class MultiBankBackend(DimaBackend):
         if self.inner.executes_multibank:
             raise ValueError("inner backend must be a single-bank substrate")
         self.mesh = getattr(mesh, "mesh", mesh)   # ShardCtx | Mesh | None
-        if self.mesh is not None and not isinstance(self.inner,
-                                                    ReferenceBackend):
+        if self.mesh is not None and not isinstance(
+                self.inner, (ReferenceBackend, PallasBackend)):
             # fail loudly instead of silently diverging from the host path
             raise ValueError(
-                f"mesh fan-out runs the reference pipeline per shard; "
-                f"inner={self.inner.name!r} is only available on the host "
-                "path (mesh=None) — Pallas-in-shard_map is a TPU-only "
-                "upgrade (ROADMAP)")
+                f"mesh fan-out runs the reference pipeline or the banked "
+                f"Pallas kernels per shard; inner={self.inner.name!r} is "
+                "only available on the host path (mesh=None)")
         self.fused = bool(fused)
         self._jit = {}
         # -- fleet robustness state (inert at defaults) ---------------------
@@ -676,22 +736,26 @@ class MultiBankBackend(DimaBackend):
     def _merge(outs, axis=0) -> DimaOut:
         """The digital merge: per-bank code/volt blocks concatenated in
         row order (each decision is already exact-per-bank), cycle and
-        conversion counts summed — total work is bank-count invariant."""
+        conversion counts summed — total work is bank-count invariant.
+        ``trimmed`` merges like codes when every bank carries one."""
+        trimmed = None
+        if all(o.trimmed is not None for o in outs):
+            trimmed = jnp.concatenate([o.trimmed for o in outs], axis)
         return DimaOut(jnp.concatenate([o.code for o in outs], axis),
                        jnp.concatenate([o.volts for o in outs], axis),
                        sum(o.n_cycles for o in outs),
-                       sum(o.n_conversions for o in outs))
+                       sum(o.n_conversions for o in outs), trimmed)
 
     def dot(self, stored, query, *, mode="dp", key=None,
-            v_range=None) -> DimaOut:
+            v_range=None, trim=None) -> DimaOut:
         """A single op occupies a single bank: straight delegation (the
         cost model still amortizes, which is exactly the paper's † rows —
         31 other banks work on other decisions concurrently)."""
         return self.inner.dot(stored, query, mode=mode, key=key,
-                              v_range=v_range)
+                              v_range=v_range, trim=trim)
 
     def matvec(self, stored, query, *, mode="dp", key=None,
-               v_range=None) -> DimaOut:
+               v_range=None, trim=None) -> DimaOut:
         stored = jnp.asarray(stored)
         if stored.ndim != 2:
             raise ValueError(f"matvec wants stored (m, n); got "
@@ -699,24 +763,25 @@ class MultiBankBackend(DimaBackend):
         _check_op_dims(stored.shape[-1], self.p)
         if self.robust:
             return self._robust_run("matvec", stored, jnp.asarray(query),
-                                    mode, key, v_range)
+                                    mode, key, v_range, trim)
         if self.mesh is not None:
             return self._matvec_mesh(stored, jnp.asarray(query), mode, key,
-                                     v_range)
+                                     v_range, trim)
         if self.fused and isinstance(self.inner, ReferenceBackend):
             return self._fused_host("matvec", stored, jnp.asarray(query),
-                                    mode, key, v_range)
+                                    mode, key, v_range, trim)
         if self.fused and isinstance(self.inner, PallasBackend):
             return self._fused_pallas("matvec", stored, jnp.asarray(query),
-                                      mode, key, v_range)
+                                      mode, key, v_range, trim)
         return self._merge(
             [self.inner.matvec(stored[a:z], query, mode=mode,
-                               key=self._bank_key(key, b), v_range=v_range)
+                               key=self._bank_key(key, b), v_range=v_range,
+                               trim=trim)
              for b, (a, z) in enumerate(self.bank_slices(stored.shape[0]))],
             axis=0)
 
     def matmat(self, stored, queries, *, mode="dp", key=None,
-               v_range=None) -> DimaOut:
+               v_range=None, trim=None) -> DimaOut:
         stored = jnp.asarray(stored)
         queries = jnp.asarray(queries)
         if stored.ndim != 2 or queries.ndim != 2:
@@ -725,18 +790,20 @@ class MultiBankBackend(DimaBackend):
         _check_op_dims(stored.shape[-1], self.p)
         if self.robust:
             return self._robust_run("matmat", stored, queries, mode, key,
-                                    v_range)
+                                    v_range, trim)
         if self.mesh is not None:
-            return self._matmat_mesh(stored, queries, mode, key, v_range)
+            return self._matmat_mesh(stored, queries, mode, key, v_range,
+                                     trim)
         if self.fused and isinstance(self.inner, ReferenceBackend):
             return self._fused_host("matmat", stored, queries, mode, key,
-                                    v_range)
+                                    v_range, trim)
         if self.fused and isinstance(self.inner, PallasBackend):
             return self._fused_pallas("matmat", stored, queries, mode, key,
-                                      v_range)
+                                      v_range, trim)
         return self._merge(
             [self.inner.matmat(stored[a:z], queries, mode=mode,
-                               key=self._bank_key(key, b), v_range=v_range)
+                               key=self._bank_key(key, b), v_range=v_range,
+                               trim=trim)
              for b, (a, z) in enumerate(self.bank_slices(stored.shape[0]))],
             axis=1)
 
@@ -833,12 +900,14 @@ class MultiBankBackend(DimaBackend):
             code, volts = self._fault_codes(f, code, volts)
         return code, volts
 
-    def _robust_run(self, kind, stored, q, mode, key, v_range) -> DimaOut:
+    def _robust_run(self, kind, stored, q, mode, key, v_range,
+                    trim=None) -> DimaOut:
         """matvec/matmat over the physical fleet: every logical bank's
         rows run on its R replicas, the digital merge is the per-element
         median code over replicas (R=1: identity — bit-for-bit the
         ``fused=False`` loop), logical banks concatenate in row order
-        as always."""
+        as always.  ``trim`` runs the epilogue once over the merged
+        codes (the loop has no fused body to ride)."""
         m = stored.shape[0]
         R, nb = self.redundancy, self.n_banks
         chips = self._physical_chips()
@@ -860,11 +929,14 @@ class MultiBankBackend(DimaBackend):
             volts.append(v_b)
         axis = 0 if kind == "matvec" else 1
         n_ops = m if kind == "matvec" else q.shape[0] * m
-        return DimaOut(jnp.concatenate(codes, axis),
-                       jnp.concatenate(volts, axis),
+        code = jnp.concatenate(codes, axis)
+        trimmed = (None if trim is None
+                   else _trim_eager(code, q, trim, self.p, v_range, mode,
+                                    per_query=(kind == "matmat")))
+        return DimaOut(code, jnp.concatenate(volts, axis),
                        R * n_ops * pl._cycles_per_op(stored.shape[-1],
                                                      self.p),
-                       R * n_ops)
+                       R * n_ops, trimmed)
 
     def recalibrate_banks(self, stored, cal_queries, *, mode="dp",
                           v_range=None):
@@ -929,7 +1001,7 @@ class MultiBankBackend(DimaBackend):
             p, core = self.p, (_bank_matvec if kind == "matvec"
                                else _bank_matmat)
 
-            def run(d_full, d_rag, q, chip, key, vr):
+            def run(d_full, d_rag, q, chip, key, vr, coef):
                 nb = d_full.shape[0]
                 if key is None:
                     code, volts = jax.vmap(
@@ -950,25 +1022,35 @@ class MultiBankBackend(DimaBackend):
                     axis = 0 if kind == "matvec" else 1
                     code = jnp.concatenate([code, rc], axis)
                     volts = jnp.concatenate([volts, rv], axis)
-                return code, volts
+                if coef is None:
+                    return code, volts
+                # fused calibration epilogue: once over the merged codes,
+                # inside the same jit — the dispatch count stays 1
+                qs = jnp.asarray(q).astype(jnp.float32).sum(-1)
+                if kind != "matvec":
+                    qs = qs[:, None]
+                return code, volts, pl.trim_epilogue(code, qs, coef, p, vr,
+                                                     mode)
 
             self._jit[k] = jax.jit(run)
         return self._jit[k]
 
-    def _fused_host(self, kind, stored, q, mode, key, v_range) -> DimaOut:
+    def _fused_host(self, kind, stored, q, mode, key, v_range,
+                    trim=None) -> DimaOut:
         m, n = stored.shape
         rows_per, n_full, ragged = self._bank_split(m)
         d_full = stored[:n_full * rows_per].reshape(n_full, rows_per, n)
         d_rag = stored[n_full * rows_per:] if ragged else None
-        code, volts = _dispatch(lambda: self._fused_fn(kind, mode)(
-            d_full, d_rag, q, self.chip, key, v_range))
+        out = _dispatch(lambda: self._fused_fn(kind, mode)(
+            d_full, d_rag, q, self.chip, key, v_range, _trim_coef(trim)))
         n_ops = m if kind == "matvec" else q.shape[0] * m
-        return DimaOut(code, volts, n_ops * pl._cycles_per_op(n, self.p),
-                       n_ops)
+        return DimaOut(out[0], out[1], n_ops * pl._cycles_per_op(n, self.p),
+                       n_ops, out[2] if len(out) == 3 else None)
 
     # -- fused pallas path: the banked kernel grid --------------------------
 
-    def _fused_pallas(self, kind, stored, q, mode, key, v_range) -> DimaOut:
+    def _fused_pallas(self, kind, stored, q, mode, key, v_range,
+                      trim=None) -> DimaOut:
         from repro.kernels import ops as kops
         self.inner._require_kernel_mode(mode)
         m, n = stored.shape
@@ -980,12 +1062,19 @@ class MultiBankBackend(DimaBackend):
              ("matvec", "md"): kops.dima_md_bank_matvec,
              ("matmat", "dp"): kops.dima_dp_bank_matmat,
              ("matmat", "md"): kops.dima_md_bank_matmat}[(kind, mode)]
-        code, volts = _dispatch(lambda: f(
+        out = _dispatch(lambda: f(
             d_full.astype(jnp.uint8), qp.astype(jnp.uint8), self.p,
-            self.chip, key, v_range, interpret=self.inner.interpret))
+            self.chip, key, v_range, interpret=self.inner.interpret,
+            trim=trim))
+        code, volts = out[0], out[1]
+        trimmed = out[2] if len(out) == 3 else None
         if kind == "matvec":                # (nb, rows) -> (m_full,)
             code, volts = code.reshape(-1), volts.reshape(-1)
+            if trimmed is not None:
+                trimmed = trimmed.reshape(-1)
         else:                               # (nb, B, rows) -> (B, m_full)
+            if trimmed is not None:
+                trimmed = trimmed.transpose(1, 0, 2).reshape(q.shape[0], -1)
             code, volts = _merge_banked(code, volts, q.shape[0])
         if ragged:
             # separate launch: the ragged bank's padded row count — and
@@ -994,13 +1083,16 @@ class MultiBankBackend(DimaBackend):
             op = (self.inner.matvec if kind == "matvec"
                   else self.inner.matmat)
             out_r = op(stored[n_full * rows_per:], q, mode=mode,
-                       key=self._bank_key(key, n_full), v_range=v_range)
+                       key=self._bank_key(key, n_full), v_range=v_range,
+                       trim=trim)
             axis = 0 if kind == "matvec" else 1
             code = jnp.concatenate([code, out_r.code], axis)
             volts = jnp.concatenate([volts, out_r.volts], axis)
+            if trimmed is not None:
+                trimmed = jnp.concatenate([trimmed, out_r.trimmed], axis)
         n_ops = m if kind == "matvec" else q.shape[0] * m
         return DimaOut(code, volts, n_ops * pl._cycles_per_op(n, self.p),
-                       n_ops)
+                       n_ops, trimmed)
 
     # -- device-mesh fan-out ------------------------------------------------
 
@@ -1022,68 +1114,117 @@ class MultiBankBackend(DimaBackend):
                 f"axis size {self.mesh.shape['banks']}")
         return stored.reshape(nb, m // nb, n)
 
-    def _mesh_fn(self, kind, mode, has_key, has_vr):
-        """The cached jitted shard_map over the bank axis, running the
-        SAME per-bank core as the host fused path; cached per
-        (op, mode, key/v_range presence) like ``_fused_fn`` so repeated
-        mesh calls re-execute instead of re-tracing the whole per-bank
-        pipeline.  ``key``/``v_range`` are replicated *operands* (dummy
-        zeros when absent — dead code under jit), and bank ids resume
-        where the previous shard stopped, so fold_in streams match the
-        host path bank-for-bank."""
+    def _mesh_fn(self, kind, mode, has_key, has_vr, has_trim):
+        """The cached jitted shard_map over the bank axis; cached per
+        (inner, op, mode, key/v_range/trim presence) like ``_fused_fn``
+        so repeated mesh calls re-execute instead of re-tracing the whole
+        per-bank pipeline.  ``key``/``v_range``/``trim`` are replicated
+        *operands* (dummy zeros when absent — dead code under jit), and
+        bank ids resume where the previous shard stopped, so fold_in
+        streams match the host path bank-for-bank.
+
+        With a ``reference`` inner each shard vmaps the SAME per-bank
+        core as the host fused path; with a ``pallas`` inner each shard
+        is ONE banked kernel launch (kernels/ops.py ``*_bank_*`` with
+        ``bank_offset = axis_index * local_banks``) — the kernel-only
+        device path, codes bitwise equal to the host fused Pallas path
+        (which stays the oracle; volts/trimmed to float-assembly
+        tolerance)."""
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec
         _check_mode(mode)
-        k = ("mesh", kind, mode, has_key, has_vr)
+        pallas_inner = isinstance(self.inner, PallasBackend)
+        k = ("mesh", self.inner.name, kind, mode, has_key, has_vr, has_trim)
         if k not in self._jit:
             p, chip = self.p, self.chip
-            core = _bank_matvec if kind == "matvec" else _bank_matmat
 
-            def per_shard(d_blk, q, key, vr):
-                start = jax.lax.axis_index("banks") * d_blk.shape[0]
-                vrange = (vr[0], vr[1]) if has_vr else None
+            if pallas_inner:
+                from repro.kernels import ops as kops
+                self.inner._require_kernel_mode(mode)
+                kf = {("matvec", "dp"): kops.dima_dp_bank_matvec,
+                      ("matvec", "md"): kops.dima_md_bank_matvec,
+                      ("matmat", "dp"): kops.dima_dp_bank_matmat,
+                      ("matmat", "md"): kops.dima_md_bank_matmat}[
+                    (kind, mode)]
+                interp = self.inner.interpret
 
-                def one_bank(i, d_b):
-                    kk = (jax.random.fold_in(key, start + i) if has_key
-                          else None)
-                    return core(d_b, q, p, chip, kk, mode, vrange)
+                def per_shard(d_blk, q, key, vr, ep):
+                    start = jax.lax.axis_index("banks") * d_blk.shape[0]
+                    dp = pl._pad_to_conversion(
+                        d_blk.astype(jnp.int32), p).astype(jnp.uint8)
+                    qp = pl._pad_to_conversion(
+                        q.astype(jnp.int32), p).astype(jnp.uint8)
+                    return kf(dp, qp, p, chip,
+                              key if has_key else None,
+                              (vr[0], vr[1]) if has_vr else None,
+                              interpret=interp,
+                              trim=ep if has_trim else None,
+                              bank_offset=start)
+            else:
+                core = _bank_matvec if kind == "matvec" else _bank_matmat
 
-                return jax.vmap(one_bank)(jnp.arange(d_blk.shape[0]),
-                                          d_blk)
+                def per_shard(d_blk, q, key, vr, ep):
+                    start = jax.lax.axis_index("banks") * d_blk.shape[0]
+                    vrange = (vr[0], vr[1]) if has_vr else None
 
+                    def one_bank(i, d_b):
+                        kk = (jax.random.fold_in(key, start + i) if has_key
+                              else None)
+                        return core(d_b, q, p, chip, kk, mode, vrange)
+
+                    code, volts = jax.vmap(one_bank)(
+                        jnp.arange(d_blk.shape[0]), d_blk)
+                    if not has_trim:
+                        return code, volts
+                    qs = jnp.asarray(q).astype(jnp.float32).sum(-1)
+                    if kind != "matvec":
+                        qs = qs[:, None]    # broadcasts over the bank axis
+                    return code, volts, pl.trim_epilogue(code, qs, ep, p,
+                                                         vrange, mode)
+
+            n_out = 3 if has_trim else 2
             self._jit[k] = jax.jit(shard_map(
                 per_shard, mesh=self.mesh,
                 in_specs=(PartitionSpec("banks"), PartitionSpec(),
-                          PartitionSpec(), PartitionSpec()),
-                out_specs=(PartitionSpec("banks"), PartitionSpec("banks")),
+                          PartitionSpec(), PartitionSpec(),
+                          PartitionSpec()),
+                out_specs=(PartitionSpec("banks"),) * n_out,
                 check_rep=False))
         return self._jit[k]
 
-    def _mesh_call(self, kind, banked, q, mode, key, v_range):
-        f = self._mesh_fn(kind, mode, key is not None, v_range is not None)
+    def _mesh_call(self, kind, banked, q, mode, key, v_range, trim):
+        f = self._mesh_fn(kind, mode, key is not None, v_range is not None,
+                          trim is not None)
         key_op = (jnp.zeros((2,), jnp.uint32) if key is None
                   else key)
         vr_op = (jnp.zeros((2,), jnp.float32) if v_range is None
                  else jnp.asarray(v_range, jnp.float32))
-        return _dispatch(lambda: f(banked, q, key_op, vr_op))
+        ep_op = (jnp.zeros((3,), jnp.float32) if trim is None
+                 else _trim_coef(trim))
+        return _dispatch(lambda: f(banked, q, key_op, vr_op, ep_op))
 
-    def _matvec_mesh(self, stored, query, mode, key, v_range) -> DimaOut:
+    def _matvec_mesh(self, stored, query, mode, key, v_range,
+                     trim=None) -> DimaOut:
         m, n = stored.shape
         banked = self._mesh_banked(stored)
-        code, volts = self._mesh_call("matvec", banked, query, mode, key,
-                                      v_range)
-        return DimaOut(code.reshape(m), volts.reshape(m),
-                       m * pl._cycles_per_op(n, self.p), m)
+        out = self._mesh_call("matvec", banked, query, mode, key, v_range,
+                              trim)
+        trimmed = out[2].reshape(m) if len(out) == 3 else None
+        return DimaOut(out[0].reshape(m), out[1].reshape(m),
+                       m * pl._cycles_per_op(n, self.p), m, trimmed)
 
-    def _matmat_mesh(self, stored, queries, mode, key, v_range) -> DimaOut:
+    def _matmat_mesh(self, stored, queries, mode, key, v_range,
+                     trim=None) -> DimaOut:
         m, n = stored.shape
         b = queries.shape[0]
         banked = self._mesh_banked(stored)
-        code, volts = self._mesh_call("matmat", banked, queries, mode, key,
-                                      v_range)
-        code, volts = _merge_banked(code, volts, b)
+        out = self._mesh_call("matmat", banked, queries, mode, key, v_range,
+                              trim)
+        trimmed = (out[2].transpose(1, 0, 2).reshape(b, -1)
+                   if len(out) == 3 else None)
+        code, volts = _merge_banked(out[0], out[1], b)
         return DimaOut(code, volts, b * m * pl._cycles_per_op(n, self.p),
-                       b * m)
+                       b * m, trimmed)
 
     # -- cost ---------------------------------------------------------------
 
@@ -1121,27 +1262,43 @@ _MIN_ROWS_NEVER = 1 << 62
 
 def measured_min_rows(path: str = None) -> Optional[int]:
     """The reference↔pallas crossover measured by ``benchmarks/run.py``
-    (``auto_crossover_rows`` in the repo-root BENCH_dima_api.json,
-    override the path with $DIMA_BENCH_JSON).  None when no benchmark
-    run has produced one — AutoBackend then falls back to the static
-    default.  The sentinel ``"never"`` means the sweep *measured* pallas
-    losing at every relevant count — that returns an effectively
-    infinite threshold, NOT the static fallback: 'measured: pallas
-    never wins' must keep auto off the pallas path, while 'not
-    measured' merely reverts to the default guess.
+    (repo-root BENCH_dima_api.json, override the path with
+    $DIMA_BENCH_JSON).  None when no benchmark run has produced one for
+    *this platform* — AutoBackend then falls back to the static default.
+    The sentinel ``"never"`` means the sweep *measured* pallas losing at
+    every relevant count — that returns an effectively infinite
+    threshold, NOT the static fallback: 'measured: pallas never wins'
+    must keep auto off the pallas path, while 'not measured' merely
+    reverts to the default guess.
 
-    The crossover is platform-specific (interpret-mode Pallas on CPU vs
-    native lowering on TPU), so a measurement tagged with a different
-    ``auto_crossover_platform`` than the running backend is ignored;
-    untagged artifacts are trusted as-is."""
+    The crossover is platform-specific — ``"never"`` on CPU is an
+    interpret-mode artifact that says nothing about TPU/GPU — so the
+    artifact's ``crossover`` section is keyed by ``jax.default_backend()``
+    platform name::
+
+        "crossover": {"cpu": {"rows": "never", ...},
+                      "tpu": {"rows": 256, ...}}
+
+    and only the entry matching the running platform is read.  Legacy
+    flat artifacts (``auto_crossover_rows`` + ``auto_crossover_platform``
+    tag) are still honored: a measurement tagged with a different
+    platform than the running backend is ignored; untagged flat
+    artifacts are trusted as-is."""
     path = path or os.environ.get("DIMA_BENCH_JSON", _BENCH_JSON)
     try:
         with open(path) as f:
             data = json.load(f)
-        plat = data.get("auto_crossover_platform")
-        if plat is not None and plat != jax.default_backend():
-            return None
-        v = data.get("auto_crossover_rows")
+        section = data.get("crossover")
+        if isinstance(section, dict):
+            entry = section.get(jax.default_backend())
+            if entry is None:
+                return None
+            v = entry.get("rows") if isinstance(entry, dict) else entry
+        else:                                   # legacy flat layout
+            plat = data.get("auto_crossover_platform")
+            if plat is not None and plat != jax.default_backend():
+                return None
+            v = data.get("auto_crossover_rows")
         if v == "never":
             return _MIN_ROWS_NEVER
         return int(v) if v else None
@@ -1180,20 +1337,20 @@ class AutoBackend(DimaBackend):
         return self.reference
 
     def dot(self, stored, query, *, mode="dp", key=None,
-            v_range=None) -> DimaOut:
+            v_range=None, trim=None) -> DimaOut:
         return self.pick(stored, query, mode).dot(
-            stored, query, mode=mode, key=key, v_range=v_range)
+            stored, query, mode=mode, key=key, v_range=v_range, trim=trim)
 
     def matvec(self, stored, query, *, mode="dp", key=None,
-               v_range=None) -> DimaOut:
+               v_range=None, trim=None) -> DimaOut:
         return self.pick(stored, query, mode).matvec(
-            stored, query, mode=mode, key=key, v_range=v_range)
+            stored, query, mode=mode, key=key, v_range=v_range, trim=trim)
 
     def matmat(self, stored, queries, *, mode="dp", key=None,
-               v_range=None) -> DimaOut:
+               v_range=None, trim=None) -> DimaOut:
         queries = jnp.asarray(queries)
         return self.pick(stored, queries[0], mode).matmat(
-            stored, queries, mode=mode, key=key, v_range=v_range)
+            stored, queries, mode=mode, key=key, v_range=v_range, trim=trim)
 
 
 # ---------------------------------------------------------------------------
@@ -1243,7 +1400,7 @@ class BitSerialBackend(DimaBackend):
 
     def __init__(self, p: DimaParams = None, chip=None, n_planes: int = 1,
                  physical: bool = False, full_swing: bool = True,
-                 interpret: bool = None):
+                 interpret: bool = None, plane_v_range=None):
         super().__init__(p, chip)
         from repro.quant import bitplanes as bp_mod
         self._bp = bp_mod
@@ -1252,6 +1409,13 @@ class BitSerialBackend(DimaBackend):
         self.physical = bool(physical)
         self.full_swing = bool(full_swing)
         self.interpret = interpret
+        # per-plane ADC windows for the physical path: (n_planes, 2) f32,
+        # e.g. calibration.calibrate_plane_range's data-driven windows;
+        # None = the analytic worst-case calibration.plane_v_range
+        self.plane_v_range = (
+            None if plane_v_range is None
+            else jnp.asarray(plane_v_range,
+                             jnp.float32).reshape(self.n_planes, 2))
         self._ref = ReferenceBackend(self.p, chip)
         self._jit = {}
 
@@ -1259,7 +1423,8 @@ class BitSerialBackend(DimaBackend):
         return BitSerialBackend(self.p, None, n_planes=self.n_planes,
                                 physical=self.physical,
                                 full_swing=self.full_swing,
-                                interpret=self.interpret)
+                                interpret=self.interpret,
+                                plane_v_range=self.plane_v_range)
 
     # -- the linear multi-plane core (one traced computation) ---------------
 
@@ -1337,107 +1502,162 @@ class BitSerialBackend(DimaBackend):
         _check_mode(mode)
         k = (kind, mode)
         if k not in self._jit:
+            p = self.p
+
+            def _with_trim(code, volts, q, vr, coef, per_query):
+                if coef is None:
+                    return code, volts
+                qs = jnp.asarray(q).astype(jnp.float32).sum(-1)
+                if per_query:
+                    qs = qs[:, None]
+                return code, volts, pl.trim_epilogue(code, qs, coef, p, vr,
+                                                     mode)
+
             if kind == "matmat":
-                def run(s, qs, chip, key, vr):
+                def run(s, qs, chip, key, vr, coef):
                     if key is None:
-                        return jax.vmap(lambda q: self._plane_core(
+                        code, volts = jax.vmap(lambda q: self._plane_core(
                             s, q, mode, chip, None, vr))(qs)
-                    keys = jax.random.split(key, qs.shape[0])
-                    return jax.vmap(lambda q, kk: self._plane_core(
-                        s, q, mode, chip, kk, vr))(qs, keys)
+                    else:
+                        keys = jax.random.split(key, qs.shape[0])
+                        code, volts = jax.vmap(lambda q, kk: self._plane_core(
+                            s, q, mode, chip, kk, vr))(qs, keys)
+                    return _with_trim(code, volts, qs, vr, coef, True)
                 self._jit[k] = jax.jit(run)
             else:
-                self._jit[k] = jax.jit(
-                    lambda s, q, chip, key, vr: self._plane_core(
-                        s, q, mode, chip, key, vr))
+                def run(s, q, chip, key, vr, coef):
+                    code, volts = self._plane_core(s, q, mode, chip, key, vr)
+                    return _with_trim(code, volts, q, vr, coef, False)
+                self._jit[k] = jax.jit(run)
         return self._jit[k]
 
     # -- physical per-plane readout (planes on the bank-leading grid) -------
 
-    def _physical_matop(self, kind, stored, q, mode, key, v_range):
+    def _physical_fn(self, kind):
+        """The physical path's one jitted body: plane kernel launch →
+        per-plane decode (each plane against its OWN ADC window row) →
+        shifted accumulate → re-ADC, plus the optional fused trim
+        epilogue — plane merge and epilogue ride the kernel dispatch
+        instead of separate XLA ops per call."""
+        k = ("physical", kind)
+        if k not in self._jit:
+            from repro.kernels import ops as ops_mod
+            p, B, w = self.p, self.n_planes, self.plane_bits
+            per = p.dims_per_conversion
+            gain = self._gain("dp")
+            interpret = self.interpret
+            f = (ops_mod.dima_dp_plane_matvec if kind == "matvec"
+                 else ops_mod.dima_dp_plane_matmat)
+
+            def run(planes, q, chip, key, pvr, vr, coef):
+                codes, _ = f(planes, q, p, chip, key, pvr,
+                             interpret=interpret)    # (B, [b,] m)
+                # per-plane decode: window row k decodes plane k (a (B,2)
+                # pvr cannot go through pl.code_to_dot, whose v_range is
+                # one scalar pair — broadcast the rows explicitly)
+                full = float(2 ** p.adc_bits - 1)
+                shape = (B,) + (1,) * (codes.ndim - 1)
+                lo = pvr[:, 0].reshape(shape)
+                hi = pvr[:, 1].reshape(shape)
+                vd = lo + codes.astype(jnp.float32) / full * (hi - lo)
+                pd = vd / gain * per
+                wts = (2.0 ** (w * jnp.arange(B))).reshape(shape)
+                acc = jnp.sum(pd * wts, axis=0)
+                v = acc.astype(jnp.float32) / per * gain
+                code = adc_mod.adc(v, vr[0], vr[1], p)
+                if coef is None:
+                    return code, v
+                qs = jnp.asarray(q).astype(jnp.float32).sum(-1)
+                if kind != "matvec":
+                    qs = qs[:, None]
+                return code, v, pl.trim_epilogue(code, qs, coef, p,
+                                                 (vr[0], vr[1]), "dp")
+
+            self._jit[k] = jax.jit(run)
+        return self._jit[k]
+
+    def _physical_matop(self, kind, stored, q, mode, key, v_range,
+                        trim=None):
         from repro.core import calibration as cal_mod
-        from repro.kernels import ops as ops_mod
         if mode != "dp":
             raise NotImplementedError(
                 "physical bitserial planes ride the dp bank kernels; "
                 "md needs a plane-split query per plane")
-        p, B, w = self.p, self.n_planes, self.plane_bits
+        p, B = self.p, self.n_planes
         stored = jnp.asarray(stored, jnp.uint8)
         per = p.dims_per_conversion
         pad = per - stored.shape[-1]
+        q = jnp.asarray(q, jnp.uint8)
         if pad:
             stored = jnp.pad(stored, [(0, 0)] * (stored.ndim - 1) + [(0, pad)])
-            q = jnp.pad(jnp.asarray(q, jnp.uint8),
-                        [(0, 0)] * (jnp.asarray(q).ndim - 1) + [(0, pad)])
+            q = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, pad)])
         planes = self._bp.split_planes(stored, B)    # (B, m, 256)
-        plane_vr = cal_mod.plane_v_range(p, mode=mode, n_planes=B)
-        f = (ops_mod.dima_dp_plane_matvec if kind == "matvec"
-             else ops_mod.dima_dp_plane_matmat)
-        codes, _ = _dispatch(lambda: f(
-            planes, q, p, self.chip, key, plane_vr,
-            interpret=self.interpret))               # (B, [b,] m)
-        pd = pl.code_to_dot(codes, p, plane_vr)      # per-plane dot value
-        wts = (2.0 ** (w * jnp.arange(B))).reshape((B,) + (1,) * (pd.ndim - 1))
-        acc = jnp.sum(pd * wts, axis=0)
-        v = acc.astype(jnp.float32) / per * self._gain(mode)
-        if v_range is None:
-            v_range = self._default_range(mode)
-        code = adc_mod.adc(v, v_range[0], v_range[1], p)
-        return code, v
+        pvr = self.plane_v_range
+        if pvr is None:
+            lo, hi = cal_mod.plane_v_range(p, mode=mode, n_planes=B)
+            pvr = jnp.broadcast_to(
+                jnp.asarray([lo, hi], jnp.float32), (B, 2))
+        vr = jnp.asarray(self._default_range(mode) if v_range is None
+                         else v_range, jnp.float32)
+        return _dispatch(lambda: self._physical_fn(kind)(
+            planes, q, self.chip, key, pvr, vr, _trim_coef(trim)))
 
     # -- the one signature --------------------------------------------------
 
     def dot(self, stored, query, *, mode="dp", key=None,
-            v_range=None) -> DimaOut:
+            v_range=None, trim=None) -> DimaOut:
         if self.n_planes == 1:
             return self._ref.dot(stored, query, mode=mode, key=key,
-                                 v_range=v_range)
+                                 v_range=v_range, trim=trim)
         stored = jnp.asarray(stored)
         query = jnp.asarray(query)
         n = max(stored.shape[-1], query.shape[-1])
         _check_op_dims(n, self.p)
-        code, volts = _dispatch(lambda: self._fn("op", mode)(
-            stored, query, self.chip, key, v_range))
-        return DimaOut(code, volts,
+        out = _dispatch(lambda: self._fn("op", mode)(
+            stored, query, self.chip, key, v_range, _trim_coef(trim)))
+        return DimaOut(out[0], out[1],
                        self.n_planes * pl._cycles_per_op(n, self.p),
-                       self.n_planes)
+                       self.n_planes, out[2] if len(out) == 3 else None)
 
     def matvec(self, stored, query, *, mode="dp", key=None,
-               v_range=None) -> DimaOut:
+               v_range=None, trim=None) -> DimaOut:
         if self.n_planes == 1:
             return self._ref.matvec(stored, query, mode=mode, key=key,
-                                    v_range=v_range)
+                                    v_range=v_range, trim=trim)
         stored = jnp.asarray(stored)
         m = stored.shape[0]
         _check_op_dims(stored.shape[-1], self.p)
         if self.physical:
-            code, volts = self._physical_matop("matvec", stored, query,
-                                               mode, key, v_range)
+            out = self._physical_matop("matvec", stored, query, mode, key,
+                                       v_range, trim)
         else:
-            code, volts = _dispatch(lambda: self._fn("matvec", mode)(
-                stored, jnp.asarray(query), self.chip, key, v_range))
+            out = _dispatch(lambda: self._fn("matvec", mode)(
+                stored, jnp.asarray(query), self.chip, key, v_range,
+                _trim_coef(trim)))
         cyc = pl._cycles_per_op(stored.shape[-1], self.p)
-        return DimaOut(code, volts, m * self.n_planes * cyc,
-                       m * self.n_planes)
+        return DimaOut(out[0], out[1], m * self.n_planes * cyc,
+                       m * self.n_planes,
+                       out[2] if len(out) == 3 else None)
 
     def matmat(self, stored, queries, *, mode="dp", key=None,
-               v_range=None) -> DimaOut:
+               v_range=None, trim=None) -> DimaOut:
         if self.n_planes == 1:
             return self._ref.matmat(stored, queries, mode=mode, key=key,
-                                    v_range=v_range)
+                                    v_range=v_range, trim=trim)
         stored = jnp.asarray(stored)
         queries = jnp.asarray(queries)
         b, m = queries.shape[0], stored.shape[0]
         _check_op_dims(stored.shape[-1], self.p)
         if self.physical:
-            code, volts = self._physical_matop("matmat", stored, queries,
-                                               mode, key, v_range)
+            out = self._physical_matop("matmat", stored, queries, mode, key,
+                                       v_range, trim)
         else:
-            code, volts = _dispatch(lambda: self._fn("matmat", mode)(
-                stored, queries, self.chip, key, v_range))
+            out = _dispatch(lambda: self._fn("matmat", mode)(
+                stored, queries, self.chip, key, v_range, _trim_coef(trim)))
         cyc = pl._cycles_per_op(stored.shape[-1], self.p)
-        return DimaOut(code, volts, b * m * self.n_planes * cyc,
-                       b * m * self.n_planes)
+        return DimaOut(out[0], out[1], b * m * self.n_planes * cyc,
+                       b * m * self.n_planes,
+                       out[2] if len(out) == 3 else None)
 
     def decision_cost(self, n_dims: int, *, mode="dp", n_ops=1,
                       multi_bank=False, **kw) -> energy_mod.Cost:

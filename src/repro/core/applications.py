@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import api as api_mod
 from repro.core import calibration as cal_mod
 from repro.core import energy as energy_mod
 from repro.core import pipeline as pl
@@ -77,9 +78,36 @@ def train_linear_svm(X, y, steps=400, lr=0.5, c=1e-3, seed=0):
     return np.asarray(w), float(b)
 
 
+def signed_rail_scores(be, w_signed, X, *, key=None, v_range=None):
+    """Differential signed-weight scoring on the unsigned array: the
+    signed weight vector splits into two non-negative rails
+    (``quant.bitplanes.sign_split``: w = pos − neg), each rail streams as
+    an ordinary unsigned chunked dot, and the controller subtracts the
+    decoded rails — the alternative to offset-binary storage with no
+    ``128·Σx`` cross term to remove digitally.  Rail keys are
+    ``fold_in(key, 0)`` / ``fold_in(key, 1)``; at zero noise the scorer
+    is bitwise identical across the analog substrates (the standing
+    parity matrix), and on the digital backend it reproduces the straight
+    ``pipeline.digital_dot`` → ADC → decode rail difference bitwise —
+    both pinned in the test suite."""
+    from repro.quant import bitplanes as bp_mod
+    pos, neg = bp_mod.sign_split(np.asarray(w_signed))
+    kp = None if key is None else jax.random.fold_in(key, 0)
+    kn = None if key is None else jax.random.fold_in(key, 1)
+    sp = api_mod.chunked_dot(be, pos[None, :], X, mode="dp", key=kp,
+                             v_range=v_range)
+    sn = api_mod.chunked_dot(be, neg[None, :], X, mode="dp", key=kn,
+                             v_range=v_range)
+    return np.asarray(sp, np.float64) - np.asarray(sn, np.float64)
+
+
 def run_svm(p: DimaParams = DimaParams(), chip=None, key=None,
             n_queries=100, seed=0, backend="reference",
-            backend_kwargs=None) -> AppResult:
+            backend_kwargs=None, signed_rails=False) -> AppResult:
+    """``signed_rails=True`` swaps the offset-binary weight storage for
+    the two-rail ``sign_split`` layout (``signed_rail_scores``): the
+    trim is then fitted on the signed rail difference instead of the
+    offset-binary dot."""
     be = get_backend(backend, p, chip, **(backend_kwargs or {}))
     X, y = synthetic.faces_dataset(seed=seed)
     Xtr, ytr = X[:-n_queries], y[:-n_queries]
@@ -99,9 +127,25 @@ def run_svm(p: DimaParams = DimaParams(), chip=None, key=None,
 
     Xcal = Xtr[:64]
     kc, kt = _split2(key)
-    cal = cal_mod.calibrate(be, w_stored[None, :], Xcal, mode="dp",
-                            target=score_digital(Xcal), key=kc)
-    score_a = cal_mod.trimmed_scores(cal, be, w_stored[None, :], Xte, key=kt)
+    if signed_rails:
+        from repro.quant import bitplanes as bp_mod
+        pos, neg = bp_mod.sign_split(wq)
+        lo_p, hi_p = cal_mod.calibrate_range(be, pos[None, :], Xcal,
+                                             mode="dp")
+        lo_n, hi_n = cal_mod.calibrate_range(be, neg[None, :], Xcal,
+                                             mode="dp")
+        v_range = (min(lo_p, lo_n), max(hi_p, hi_n))
+        s_cal = signed_rail_scores(be, wq, Xcal, key=kc, v_range=v_range)
+        feats = np.stack([s_cal, Xcal.astype(np.float64).sum(-1)], 1)
+        coef = cal_mod.affine_trim(feats, score_digital(Xcal))
+        s_te = signed_rail_scores(be, wq, Xte, key=kt, v_range=v_range)
+        score_a = cal_mod.apply_trim(
+            coef, np.stack([s_te, Xte.astype(np.float64).sum(-1)], 1))
+    else:
+        cal = cal_mod.calibrate(be, w_stored[None, :], Xcal, mode="dp",
+                                target=score_digital(Xcal), key=kc)
+        score_a = cal_mod.trimmed_scores(cal, be, w_stored[None, :], Xte,
+                                         key=kt)
     acc_dima = float(np.mean((score_a >= 0) == (yte == 1)))
 
     return _result("svm", p, n_queries, acc_dima, acc_dig)

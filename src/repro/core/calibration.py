@@ -95,6 +95,43 @@ def plane_v_range(p, mode="dp", n_planes: int = 1,
     return (0.0 - margin * hi, hi * (1.0 + margin))
 
 
+def calibrate_plane_range(stored, cal_queries, p, *, mode="dp",
+                          n_planes: int = 1, margin: float = 0.05):
+    """Data-driven per-plane ADC windows for the physical bitserial path:
+    (n_planes, 2) float32, row ``k`` the window of plane ``k`` (LSB
+    first, ``bitplanes.split_planes`` order).
+
+    ``plane_v_range`` is the *analytic worst case* — every plane gets the
+    window a full-scale plane dot could need, shared across planes.  Real
+    operands never reach it (and the LSB planes of random data sit far
+    below the MSB planes' swing), so most of each 8-b ramp is wasted
+    code space.  This measures each plane's actual ideal-transfer swing
+    over the calibration queries — exact integer plane dots, the same
+    voltage the kernel's ideal chain develops — and programs one window
+    per plane with ``margin`` headroom; the banked kernels take the
+    (B, 2) stack directly as their per-bank ``v_range`` operand
+    (``BitSerialBackend(plane_v_range=...)``), tightening per-plane
+    quantization and thereby the reconstructed 8-b result."""
+    from repro.core import pipeline as pl_mod
+    from repro.quant import bitplanes as bp_mod
+    if mode != "dp":
+        raise NotImplementedError(
+            "per-plane windows serve the physical bitserial path, "
+            "which is dp only")
+    planes = np.asarray(bp_mod.split_planes(
+        jnp.asarray(stored, jnp.uint8), n_planes), np.int64)   # (B, m, n)
+    qs = np.asarray(cal_queries, np.int64)
+    if qs.ndim == 1:
+        qs = qs[None, :]
+    pd = np.einsum("bmn,cn->bcm", planes, qs)                  # exact ints
+    v = pd.astype(np.float64) / p.dims_per_conversion * pl_mod.dp_gain(p)
+    lo = v.min(axis=(1, 2))
+    hi = v.max(axis=(1, 2))
+    span = np.maximum(hi - lo, 1e-9)
+    out = np.stack([lo - margin * span, hi + margin * span], axis=1)
+    return jnp.asarray(out, jnp.float32)
+
+
 def calibrate(backend: api_mod.DimaBackend, stored, cal_queries, *,
               mode="dp", target=None, key=None, margin=0.05) -> Calibration:
     """Full calibration: ADC range (ideal-chip pass) + optional affine
@@ -111,10 +148,38 @@ def calibrate(backend: api_mod.DimaBackend, stored, cal_queries, *,
 
 
 def trimmed_scores(cal: Calibration, backend: api_mod.DimaBackend, stored,
-                   queries, *, key=None) -> np.ndarray:
+                   queries, *, key=None, fused=None) -> np.ndarray:
     """Analog scores through the fitted trim (query-time path of the
-    signed applications)."""
+    signed applications).
+
+    When the operand fits one conversion, ``fused=None`` (auto) runs the
+    whole chain as ONE backend op with the fused epilogue
+    (``trim=cal.coef`` -> ``DimaOut.trimmed``) — no separate decode /
+    trim XLA ops — using the chunked path's ``fold_in(key, 0)``
+    single-chunk key, so the ADC codes are bitwise the legacy path's and
+    the scores agree to f32 (the legacy ``apply_trim`` is the float64
+    oracle).  Multi-chunk operands always take the legacy chunked path
+    (the trim is fitted on the *summed* decoded chunks, which no single
+    launch sees)."""
     assert cal.coef is not None, "calibration was fitted without a target"
+    stored_a = jnp.asarray(stored)
+    queries_a = jnp.asarray(queries)
+    n = max(stored_a.shape[-1], queries_a.shape[-1])
+    one_chunk = n <= backend.p.dims_per_conversion
+    if fused is None:
+        fused = one_chunk
+    if fused:
+        if not one_chunk:
+            raise ValueError(
+                f"fused trimmed_scores needs a single-conversion operand "
+                f"(n={n} > {backend.p.dims_per_conversion}); the chunked "
+                "path decodes per chunk before the trim — pass "
+                "fused=False")
+        k0 = None if key is None else jax.random.fold_in(key, 0)
+        out = backend.dot(stored_a, queries_a, mode=cal.mode, key=k0,
+                          v_range=cal.v_range,
+                          trim=np.asarray(cal.coef, np.float32))
+        return np.asarray(out.trimmed, np.float64)
     feats = analog_feats(backend, stored, queries, mode=cal.mode, key=key,
                          v_range=cal.v_range)
     return apply_trim(cal.coef, feats)

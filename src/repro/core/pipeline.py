@@ -31,6 +31,9 @@ class DimaOut(NamedTuple):
     volts: jnp.ndarray       # pre-ADC analog value
     n_cycles: int            # access cycles consumed (energy/timing model)
     n_conversions: int
+    # trimmed scores when the op ran with a fused calibration epilogue
+    # (``trim=coef``); None on the plain code/volts path
+    trimmed: Optional[jnp.ndarray] = None
 
 
 def _pad_to_conversion(x, p: DimaParams):
@@ -246,6 +249,39 @@ def code_to_md(code, p: DimaParams, v_range=None):
         v_range = (0.0, 255.0 * md_gain(p))
     v = adc_mod.dac(code, v_range[0], v_range[1], p)
     return v / md_gain(p) * p.dims_per_conversion
+
+
+def trim_epilogue(code, q_sum, coef, p: DimaParams, v_range=None,
+                  mode="dp"):
+    """The calibration epilogue as ONE float32 jnp expression:
+    decode the ADC code to dot units and apply the affine trim
+    ``c₀·d̂ + c₁·Σq + c₂`` (``calibration.affine_trim``'s feature order).
+
+    This is the single definition of the fused-epilogue arithmetic: the
+    Pallas kernel bodies (kernels/dima_{dp,md}.py) inline this operation
+    order, and the host fused paths call it verbatim.  The ADC *codes*
+    stay bitwise identical whether or not the epilogue runs; the f32
+    ``trimmed`` value itself may differ by 1-2 ulp of the score scale
+    across compilation contexts (XLA fuses/reassociates the chain
+    differently per surrounding program — even eager vs jit of this very
+    function differ), so cross-substrate comparisons of ``trimmed`` use
+    a ~1e-6 relative tolerance, never exact equality.  ``v_range`` is
+    cast to float32 up front — the kernels carry it as a f32 operand,
+    and a float64 window here would silently break code parity.
+
+    Distinct from ``calibration.apply_trim`` (the float64 numpy oracle
+    used when fitting): this is the deployable f32 form whose residual vs
+    the oracle is ≤ a few ulp of the score scale."""
+    gain = dp_gain(p) if mode == "dp" else md_gain(p)
+    if v_range is None:
+        full_val = 255.0 * 255.0 if mode == "dp" else 255.0
+        v_range = (0.0, full_val * gain)
+    vr = jnp.asarray(v_range, jnp.float32)
+    v = adc_mod.dac(code, vr[0], vr[1], p)
+    dot_hat = v / gain * p.dims_per_conversion
+    c = jnp.asarray(coef, jnp.float32)
+    q_sum = jnp.asarray(q_sum, jnp.float32)
+    return (c[0] * dot_hat + c[1] * q_sum) + c[2]
 
 
 # ---------------------------------------------------------------------------

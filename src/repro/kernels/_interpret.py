@@ -1,0 +1,26 @@
+"""Interpret-mode resolution shared by every Pallas kernel wrapper.
+
+``interpret=None`` (the default everywhere) resolves to interpret mode
+on CPU and native lowering on accelerators.  The ``DIMA_PALLAS_INTERPRET``
+environment variable overrides that default in either direction — the CI
+interpret-mode leg sets it to force the kernel bodies through the Pallas
+interpreter even where a compiled path exists, so kernel-body changes
+are exercised on CPU-only runners.  An explicit ``interpret=True/False``
+argument always wins over the environment.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+ENV_VAR = "DIMA_PALLAS_INTERPRET"
+
+
+def resolve_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    env = os.environ.get(ENV_VAR)
+    if env:
+        return env.strip().lower() not in ("0", "false", "no", "off")
+    return jax.default_backend() == "cpu"

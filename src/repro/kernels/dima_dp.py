@@ -24,14 +24,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import pipeline as pipeline_mod
 from repro.core.params import DimaParams
+from repro.kernels._interpret import resolve_interpret
 
 BM = 128
 
 
-def _make_kernel(p: DimaParams):
+def _make_kernel(p: DimaParams, trim: bool = False):
     def kernel(d_ref, q_ref, cg_ref, ce_ref, mg_ref, mo_ref, rn_ref,
-               cn_ref, vr_ref, code_ref, volt_ref):
+               cn_ref, vr_ref, *rest):
+        if trim:
+            ep_ref, code_ref, volt_ref, trim_ref = rest
+        else:
+            code_ref, volt_ref = rest
         d = d_ref[...].astype(jnp.int32).reshape(BM, 2, 128)
         q = q_ref[...].astype(jnp.int32).reshape(2, 128)
 
@@ -65,111 +71,148 @@ def _make_kernel(p: DimaParams):
         vr = vr_ref[...]
         full = float(2 ** p.adc_bits - 1)
         x = (v - vr[0, 0]) / jnp.maximum(vr[0, 1] - vr[0, 0], 1e-9)
-        code_ref[...] = jnp.clip(jnp.round(x * full), 0,
-                                 full).astype(jnp.int32).reshape(
-                                     code_ref.shape)
+        code = jnp.clip(jnp.round(x * full), 0, full).astype(jnp.int32)
+        code_ref[...] = code.reshape(code_ref.shape)
         volt_ref[...] = v.reshape(volt_ref.shape)
+        if trim:
+            # fused calibration epilogue — same operation order as
+            # pipeline.trim_epilogue (dac -> dot units -> affine trim);
+            # codes stay bitwise, the f32 trimmed value agrees with the
+            # host helper to ~1 ulp of the score scale (XLA reassociates
+            # per compilation context).  ep row: [c0, c1, c2, Σq].
+            ep = ep_ref[...]
+            vd = vr[0, 0] + code.astype(jnp.float32) / full \
+                * (vr[0, 1] - vr[0, 0])
+            dot_hat = vd / pipeline_mod.dp_gain(p) * p.dims_per_conversion
+            trimmed = (ep[0, 0] * dot_hat + ep[0, 1] * ep[0, 3]) + ep[0, 2]
+            trim_ref[...] = trimmed.reshape(trim_ref.shape)
 
     return kernel
 
 
 @functools.partial(jax.jit, static_argnames=("params", "interpret"))
 def dima_dp_batch(d, qs, col_gain, cap_eps, mult_gain, mult_off, read_noise,
-                  cblp_noise, v_range, *, params: DimaParams = DimaParams(),
-                  interpret=None):
+                  cblp_noise, v_range, ep=None, *,
+                  params: DimaParams = DimaParams(), interpret=None):
     """Query-batched grid: d (M,256) uint8; qs (B,256) uint8; chip arrays
     (…,128); read_noise (B,M,2,128); cblp_noise (B,M,2,2); v_range (1,2).
-    Returns (codes (B,M) int32, volts (B,M) f32) — one kernel launch."""
+    Returns (codes (B,M) int32, volts (B,M) f32) — one kernel launch.
+
+    ``ep`` (B,4) f32 rows ``[c0, c1, c2, Σq_b]`` switch on the fused
+    calibration epilogue: a third output ``trimmed`` (B,M) f32 is
+    appended, computed in-kernel as ``pipeline.trim_epilogue``."""
     M = d.shape[0]
     B = qs.shape[0]
     assert M % BM == 0, M
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    interpret = resolve_interpret(interpret)
     grid = (B, M // BM)
-    codes, volts = pl.pallas_call(
-        _make_kernel(params),
+    trim = ep is not None
+    in_specs = [
+        pl.BlockSpec((BM, 256), lambda b, i: (i, 0)),
+        pl.BlockSpec((1, 256), lambda b, i: (b, 0)),
+        pl.BlockSpec((1, 128), lambda b, i: (0, 0)),
+        pl.BlockSpec((1, 128), lambda b, i: (0, 0)),
+        pl.BlockSpec((2, 128), lambda b, i: (0, 0)),
+        pl.BlockSpec((2, 128), lambda b, i: (0, 0)),
+        pl.BlockSpec((1, BM, 2, 128), lambda b, i: (b, i, 0, 0)),
+        pl.BlockSpec((1, BM, 2, 2), lambda b, i: (b, i, 0, 0)),
+        pl.BlockSpec((1, 2), lambda b, i: (0, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, BM), lambda b, i: (b, i)),
+        pl.BlockSpec((1, BM), lambda b, i: (b, i)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((B, M), jnp.int32),
+        jax.ShapeDtypeStruct((B, M), jnp.float32),
+    ]
+    operands = [d, qs, col_gain.reshape(1, 128), cap_eps.reshape(1, 128),
+                mult_gain, mult_off, read_noise, cblp_noise, v_range]
+    if trim:
+        in_specs.append(pl.BlockSpec((1, 4), lambda b, i: (b, 0)))
+        out_specs.append(pl.BlockSpec((1, BM), lambda b, i: (b, i)))
+        out_shape.append(jax.ShapeDtypeStruct((B, M), jnp.float32))
+        operands.append(ep)
+    return tuple(pl.pallas_call(
+        _make_kernel(params, trim),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((BM, 256), lambda b, i: (i, 0)),
-            pl.BlockSpec((1, 256), lambda b, i: (b, 0)),
-            pl.BlockSpec((1, 128), lambda b, i: (0, 0)),
-            pl.BlockSpec((1, 128), lambda b, i: (0, 0)),
-            pl.BlockSpec((2, 128), lambda b, i: (0, 0)),
-            pl.BlockSpec((2, 128), lambda b, i: (0, 0)),
-            pl.BlockSpec((1, BM, 2, 128), lambda b, i: (b, i, 0, 0)),
-            pl.BlockSpec((1, BM, 2, 2), lambda b, i: (b, i, 0, 0)),
-            pl.BlockSpec((1, 2), lambda b, i: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, BM), lambda b, i: (b, i)),
-            pl.BlockSpec((1, BM), lambda b, i: (b, i)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B, M), jnp.int32),
-            jax.ShapeDtypeStruct((B, M), jnp.float32),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(d, qs, col_gain.reshape(1, 128), cap_eps.reshape(1, 128),
-      mult_gain, mult_off, read_noise, cblp_noise, v_range)
-    return codes, volts
+    )(*operands))
 
 
 @functools.partial(jax.jit, static_argnames=("params", "interpret"))
 def dima_dp_bank_batch(d, qs, col_gain, cap_eps, mult_gain, mult_off,
-                       read_noise, cblp_noise, v_range, *,
+                       read_noise, cblp_noise, v_range, ep=None, *,
                        params: DimaParams = DimaParams(), interpret=None):
     """Bank-leading grid: d (NB, M, 256) uint8 — one multibank shard per
     leading index; qs (B, 256); read_noise (NB, B, M, 2, 128); cblp_noise
-    (NB, B, M, 2, 2); v_range (1, 2).  Returns (codes (NB, B, M) int32,
+    (NB, B, M, 2, 2); v_range (NB, 2) — one ADC window per bank (equal
+    rows ≡ the old shared window; distinct rows serve the bitserial
+    per-plane calibrated windows).  Returns (codes (NB, B, M) int32,
     volts (NB, B, M) f32): the whole banked matmat is ONE kernel launch
     over a (NB, B, M/BM) grid — per-block compute identical to
     ``dima_dp_batch``, so results are bitwise equal to launching that
-    kernel once per bank with the corresponding noise slices."""
+    kernel once per bank with the corresponding noise slices.
+
+    ``ep`` (B,4) f32 rows ``[c0, c1, c2, Σq_b]`` append a fused-trim
+    third output (NB, B, M) f32 (see ``dima_dp_batch``)."""
     NB, M = d.shape[0], d.shape[1]
     B = qs.shape[0]
     assert M % BM == 0, M
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    interpret = resolve_interpret(interpret)
     grid = (NB, B, M // BM)
-    codes, volts = pl.pallas_call(
-        _make_kernel(params),
+    trim = ep is not None
+    in_specs = [
+        pl.BlockSpec((1, BM, 256), lambda nb, b, i: (nb, i, 0)),
+        pl.BlockSpec((1, 256), lambda nb, b, i: (b, 0)),
+        pl.BlockSpec((1, 128), lambda nb, b, i: (0, 0)),
+        pl.BlockSpec((1, 128), lambda nb, b, i: (0, 0)),
+        pl.BlockSpec((2, 128), lambda nb, b, i: (0, 0)),
+        pl.BlockSpec((2, 128), lambda nb, b, i: (0, 0)),
+        pl.BlockSpec((1, 1, BM, 2, 128),
+                     lambda nb, b, i: (nb, b, i, 0, 0)),
+        pl.BlockSpec((1, 1, BM, 2, 2),
+                     lambda nb, b, i: (nb, b, i, 0, 0)),
+        pl.BlockSpec((1, 2), lambda nb, b, i: (nb, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, 1, BM), lambda nb, b, i: (nb, b, i)),
+        pl.BlockSpec((1, 1, BM), lambda nb, b, i: (nb, b, i)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((NB, B, M), jnp.int32),
+        jax.ShapeDtypeStruct((NB, B, M), jnp.float32),
+    ]
+    operands = [d, qs, col_gain.reshape(1, 128), cap_eps.reshape(1, 128),
+                mult_gain, mult_off, read_noise, cblp_noise, v_range]
+    if trim:
+        in_specs.append(pl.BlockSpec((1, 4), lambda nb, b, i: (b, 0)))
+        out_specs.append(pl.BlockSpec((1, 1, BM), lambda nb, b, i: (nb, b, i)))
+        out_shape.append(jax.ShapeDtypeStruct((NB, B, M), jnp.float32))
+        operands.append(ep)
+    return tuple(pl.pallas_call(
+        _make_kernel(params, trim),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, BM, 256), lambda nb, b, i: (nb, i, 0)),
-            pl.BlockSpec((1, 256), lambda nb, b, i: (b, 0)),
-            pl.BlockSpec((1, 128), lambda nb, b, i: (0, 0)),
-            pl.BlockSpec((1, 128), lambda nb, b, i: (0, 0)),
-            pl.BlockSpec((2, 128), lambda nb, b, i: (0, 0)),
-            pl.BlockSpec((2, 128), lambda nb, b, i: (0, 0)),
-            pl.BlockSpec((1, 1, BM, 2, 128),
-                         lambda nb, b, i: (nb, b, i, 0, 0)),
-            pl.BlockSpec((1, 1, BM, 2, 2),
-                         lambda nb, b, i: (nb, b, i, 0, 0)),
-            pl.BlockSpec((1, 2), lambda nb, b, i: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, 1, BM), lambda nb, b, i: (nb, b, i)),
-            pl.BlockSpec((1, 1, BM), lambda nb, b, i: (nb, b, i)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((NB, B, M), jnp.int32),
-            jax.ShapeDtypeStruct((NB, B, M), jnp.float32),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(d, qs, col_gain.reshape(1, 128), cap_eps.reshape(1, 128),
-      mult_gain, mult_off, read_noise, cblp_noise, v_range)
-    return codes, volts
+    )(*operands))
 
 
 @functools.partial(jax.jit, static_argnames=("params", "interpret"))
 def dima_dp(d, q, col_gain, cap_eps, mult_gain, mult_off, read_noise,
-            cblp_noise, v_range, *, params: DimaParams = DimaParams(),
-            interpret=None):
+            cblp_noise, v_range, ep=None, *,
+            params: DimaParams = DimaParams(), interpret=None):
     """d (M,256) uint8; q (256,) uint8; chip arrays (…,128); read_noise
     (M,2,128); cblp_noise (M,2,2); v_range (1,2) f32.
-    Returns (codes (M,) int32, volts (M,) f32).  B=1 of ``dima_dp_batch``."""
-    codes, volts = dima_dp_batch(
+    Returns (codes (M,) int32, volts (M,) f32).  B=1 of ``dima_dp_batch``;
+    with ``ep`` (1,4) a third ``trimmed`` (M,) output is appended."""
+    out = dima_dp_batch(
         d, q.reshape(1, 256), col_gain, cap_eps, mult_gain, mult_off,
-        read_noise[None], cblp_noise[None], v_range, params=params,
+        read_noise[None], cblp_noise[None], v_range, ep, params=params,
         interpret=interpret)
-    return codes[0], volts[0]
+    return tuple(o[0] for o in out)

@@ -15,7 +15,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import pipeline as pipeline_mod
 from repro.core.params import DimaParams
+from repro.kernels._interpret import resolve_interpret
 
 BM = 128
 
@@ -24,11 +26,15 @@ def _transfer(c, p, beta):
     return p.delta_v_lsb * c * (1.0 - beta * c)
 
 
-def _make_kernel(p: DimaParams):
+def _make_kernel(p: DimaParams, trim: bool = False):
     beta = p.md_inl_beta
 
     def kernel(d_ref, q_ref, cg_ref, ce_ref, cmp_ref, rn_ref, rnb_ref,
-               cn_ref, vr_ref, code_ref, volt_ref):
+               cn_ref, vr_ref, *rest):
+        if trim:
+            ep_ref, code_ref, volt_ref, trim_ref = rest
+        else:
+            code_ref, volt_ref = rest
         d = d_ref[...].astype(jnp.int32).reshape(BM, 2, 128)
         q = q_ref[...].astype(jnp.int32).reshape(2, 128)
         cg = cg_ref[...]
@@ -58,109 +64,136 @@ def _make_kernel(p: DimaParams):
         vr = vr_ref[...]
         full = float(2 ** p.adc_bits - 1)
         x = (v - vr[0, 0]) / jnp.maximum(vr[0, 1] - vr[0, 0], 1e-9)
-        code_ref[...] = jnp.clip(jnp.round(x * full), 0,
-                                 full).astype(jnp.int32).reshape(
-                                     code_ref.shape)
+        code = jnp.clip(jnp.round(x * full), 0, full).astype(jnp.int32)
+        code_ref[...] = code.reshape(code_ref.shape)
         volt_ref[...] = v.reshape(volt_ref.shape)
+        if trim:
+            # fused calibration epilogue — mirrors pipeline.trim_epilogue
+            # (mode="md") operation-for-operation; ep row: [c0, c1, c2, Σq]
+            ep = ep_ref[...]
+            vd = vr[0, 0] + code.astype(jnp.float32) / full \
+                * (vr[0, 1] - vr[0, 0])
+            dot_hat = vd / pipeline_mod.md_gain(p) * p.dims_per_conversion
+            trimmed = (ep[0, 0] * dot_hat + ep[0, 1] * ep[0, 3]) + ep[0, 2]
+            trim_ref[...] = trimmed.reshape(trim_ref.shape)
 
     return kernel
 
 
 @functools.partial(jax.jit, static_argnames=("params", "interpret"))
 def dima_md_batch(d, qs, col_gain, cap_eps, cmp_noise, read_noise,
-                  read_noise_b, cblp_noise, v_range, *,
+                  read_noise_b, cblp_noise, v_range, ep=None, *,
                   params: DimaParams = DimaParams(), interpret=None):
     """d (M,256) uint8; qs (B,256); cmp/read noise (B,M,2,128); cblp
     (B,M,2); v_range (1,2).  Returns (codes (B,M), volts (B,M)) in one
-    kernel launch."""
+    kernel launch; ``ep`` (B,4) appends a fused-trim third output (see
+    ``dima_dp.dima_dp_batch``)."""
     M = d.shape[0]
     B = qs.shape[0]
     assert M % BM == 0, M
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
-    codes, volts = pl.pallas_call(
-        _make_kernel(params),
+    interpret = resolve_interpret(interpret)
+    trim = ep is not None
+    in_specs = [
+        pl.BlockSpec((BM, 256), lambda b, i: (i, 0)),
+        pl.BlockSpec((1, 256), lambda b, i: (b, 0)),
+        pl.BlockSpec((1, 128), lambda b, i: (0, 0)),
+        pl.BlockSpec((1, 128), lambda b, i: (0, 0)),
+        pl.BlockSpec((1, BM, 2, 128), lambda b, i: (b, i, 0, 0)),
+        pl.BlockSpec((1, BM, 2, 128), lambda b, i: (b, i, 0, 0)),
+        pl.BlockSpec((1, BM, 2, 128), lambda b, i: (b, i, 0, 0)),
+        pl.BlockSpec((1, BM, 2), lambda b, i: (b, i, 0)),
+        pl.BlockSpec((1, 2), lambda b, i: (0, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, BM), lambda b, i: (b, i)),
+        pl.BlockSpec((1, BM), lambda b, i: (b, i)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((B, M), jnp.int32),
+        jax.ShapeDtypeStruct((B, M), jnp.float32),
+    ]
+    operands = [d, qs, col_gain.reshape(1, 128), cap_eps.reshape(1, 128),
+                cmp_noise, read_noise, read_noise_b, cblp_noise, v_range]
+    if trim:
+        in_specs.append(pl.BlockSpec((1, 4), lambda b, i: (b, 0)))
+        out_specs.append(pl.BlockSpec((1, BM), lambda b, i: (b, i)))
+        out_shape.append(jax.ShapeDtypeStruct((B, M), jnp.float32))
+        operands.append(ep)
+    return tuple(pl.pallas_call(
+        _make_kernel(params, trim),
         grid=(B, M // BM),
-        in_specs=[
-            pl.BlockSpec((BM, 256), lambda b, i: (i, 0)),
-            pl.BlockSpec((1, 256), lambda b, i: (b, 0)),
-            pl.BlockSpec((1, 128), lambda b, i: (0, 0)),
-            pl.BlockSpec((1, 128), lambda b, i: (0, 0)),
-            pl.BlockSpec((1, BM, 2, 128), lambda b, i: (b, i, 0, 0)),
-            pl.BlockSpec((1, BM, 2, 128), lambda b, i: (b, i, 0, 0)),
-            pl.BlockSpec((1, BM, 2, 128), lambda b, i: (b, i, 0, 0)),
-            pl.BlockSpec((1, BM, 2), lambda b, i: (b, i, 0)),
-            pl.BlockSpec((1, 2), lambda b, i: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, BM), lambda b, i: (b, i)),
-            pl.BlockSpec((1, BM), lambda b, i: (b, i)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B, M), jnp.int32),
-            jax.ShapeDtypeStruct((B, M), jnp.float32),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(d, qs, col_gain.reshape(1, 128), cap_eps.reshape(1, 128),
-      cmp_noise, read_noise, read_noise_b, cblp_noise, v_range)
-    return codes, volts
+    )(*operands))
 
 
 @functools.partial(jax.jit, static_argnames=("params", "interpret"))
 def dima_md_bank_batch(d, qs, col_gain, cap_eps, cmp_noise, read_noise,
-                       read_noise_b, cblp_noise, v_range, *,
+                       read_noise_b, cblp_noise, v_range, ep=None, *,
                        params: DimaParams = DimaParams(), interpret=None):
     """Bank-leading grid: d (NB, M, 256) — one multibank shard per
     leading index; qs (B, 256); cmp/read noise (NB, B, M, 2, 128); cblp
-    (NB, B, M, 2); v_range (1, 2).  Returns (codes (NB, B, M), volts
-    (NB, B, M)): the banked matmat is ONE kernel launch over a
-    (NB, B, M/BM) grid, per-block compute identical to
-    ``dima_md_batch``."""
+    (NB, B, M, 2); v_range (NB, 2) — one ADC window per bank.  Returns
+    (codes (NB, B, M), volts (NB, B, M)): the banked matmat is ONE
+    kernel launch over a (NB, B, M/BM) grid, per-block compute identical
+    to ``dima_md_batch``; ``ep`` (B,4) appends a fused-trim third
+    output."""
     NB, M = d.shape[0], d.shape[1]
     B = qs.shape[0]
     assert M % BM == 0, M
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
-    codes, volts = pl.pallas_call(
-        _make_kernel(params),
+    interpret = resolve_interpret(interpret)
+    trim = ep is not None
+    in_specs = [
+        pl.BlockSpec((1, BM, 256), lambda nb, b, i: (nb, i, 0)),
+        pl.BlockSpec((1, 256), lambda nb, b, i: (b, 0)),
+        pl.BlockSpec((1, 128), lambda nb, b, i: (0, 0)),
+        pl.BlockSpec((1, 128), lambda nb, b, i: (0, 0)),
+        pl.BlockSpec((1, 1, BM, 2, 128),
+                     lambda nb, b, i: (nb, b, i, 0, 0)),
+        pl.BlockSpec((1, 1, BM, 2, 128),
+                     lambda nb, b, i: (nb, b, i, 0, 0)),
+        pl.BlockSpec((1, 1, BM, 2, 128),
+                     lambda nb, b, i: (nb, b, i, 0, 0)),
+        pl.BlockSpec((1, 1, BM, 2), lambda nb, b, i: (nb, b, i, 0)),
+        pl.BlockSpec((1, 2), lambda nb, b, i: (nb, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, 1, BM), lambda nb, b, i: (nb, b, i)),
+        pl.BlockSpec((1, 1, BM), lambda nb, b, i: (nb, b, i)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((NB, B, M), jnp.int32),
+        jax.ShapeDtypeStruct((NB, B, M), jnp.float32),
+    ]
+    operands = [d, qs, col_gain.reshape(1, 128), cap_eps.reshape(1, 128),
+                cmp_noise, read_noise, read_noise_b, cblp_noise, v_range]
+    if trim:
+        in_specs.append(pl.BlockSpec((1, 4), lambda nb, b, i: (b, 0)))
+        out_specs.append(pl.BlockSpec((1, 1, BM), lambda nb, b, i: (nb, b, i)))
+        out_shape.append(jax.ShapeDtypeStruct((NB, B, M), jnp.float32))
+        operands.append(ep)
+    return tuple(pl.pallas_call(
+        _make_kernel(params, trim),
         grid=(NB, B, M // BM),
-        in_specs=[
-            pl.BlockSpec((1, BM, 256), lambda nb, b, i: (nb, i, 0)),
-            pl.BlockSpec((1, 256), lambda nb, b, i: (b, 0)),
-            pl.BlockSpec((1, 128), lambda nb, b, i: (0, 0)),
-            pl.BlockSpec((1, 128), lambda nb, b, i: (0, 0)),
-            pl.BlockSpec((1, 1, BM, 2, 128),
-                         lambda nb, b, i: (nb, b, i, 0, 0)),
-            pl.BlockSpec((1, 1, BM, 2, 128),
-                         lambda nb, b, i: (nb, b, i, 0, 0)),
-            pl.BlockSpec((1, 1, BM, 2, 128),
-                         lambda nb, b, i: (nb, b, i, 0, 0)),
-            pl.BlockSpec((1, 1, BM, 2), lambda nb, b, i: (nb, b, i, 0)),
-            pl.BlockSpec((1, 2), lambda nb, b, i: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, 1, BM), lambda nb, b, i: (nb, b, i)),
-            pl.BlockSpec((1, 1, BM), lambda nb, b, i: (nb, b, i)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((NB, B, M), jnp.int32),
-            jax.ShapeDtypeStruct((NB, B, M), jnp.float32),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(d, qs, col_gain.reshape(1, 128), cap_eps.reshape(1, 128),
-      cmp_noise, read_noise, read_noise_b, cblp_noise, v_range)
-    return codes, volts
+    )(*operands))
 
 
 @functools.partial(jax.jit, static_argnames=("params", "interpret"))
 def dima_md(d, q, col_gain, cap_eps, cmp_noise, read_noise, read_noise_b,
-            cblp_noise, v_range, *, params: DimaParams = DimaParams(),
-            interpret=None):
+            cblp_noise, v_range, ep=None, *,
+            params: DimaParams = DimaParams(), interpret=None):
     """d (M,256) uint8; q (256,); cmp/read noise (M,2,128); cblp (M,2);
     v_range (1,2).  Returns (codes (M,), volts (M,)).  B=1 of
-    ``dima_md_batch``."""
-    codes, volts = dima_md_batch(
+    ``dima_md_batch``; with ``ep`` (1,4) a third ``trimmed`` (M,) output
+    is appended."""
+    out = dima_md_batch(
         d, q.reshape(1, 256), col_gain, cap_eps, cmp_noise[None],
         read_noise[None], read_noise_b[None], cblp_noise[None], v_range,
-        params=params, interpret=interpret)
-    return codes[0], volts[0]
+        ep, params=params, interpret=interpret)
+    return tuple(o[0] for o in out)

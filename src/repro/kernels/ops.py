@@ -81,10 +81,26 @@ def _chip_arrays(chip, p: DimaParams):
             chip["mult_gain"], chip["mult_off"])
 
 
+def _trim_ep(trim, qs):
+    """Pack the fused-epilogue kernel operand from a trim coefficient
+    triple and the (possibly padded) query batch: (B, 4) f32 rows
+    ``[c0, c1, c2, Σq_b]``.  The query sum is exact in float32 (≤
+    256·255 < 2²⁴) and zero padding cannot change it, so it equals the
+    host epilogue's ``q_sum`` feature bit-for-bit."""
+    if trim is None:
+        return None
+    qs = jnp.asarray(qs)
+    qsum = qs.astype(jnp.float32).sum(-1)                     # (B,)
+    c = jnp.asarray(trim, jnp.float32).reshape(3)
+    return jnp.concatenate(
+        [jnp.broadcast_to(c, (qsum.shape[0], 3)), qsum[:, None]], axis=1)
+
+
 def dima_dp_banked(d, q, p: DimaParams = DimaParams(), chip=None, key=None,
-                   v_range=None, interpret=None):
+                   v_range=None, interpret=None, trim=None):
     """Banked DP: d (M,256) uint8 rows vs one query q (256,).
-    Returns (codes, volts), M padded internally to 128."""
+    Returns (codes, volts), M padded internally to 128; with
+    ``trim=(c0,c1,c2)`` the fused epilogue appends trimmed scores."""
     M = d.shape[0]
     dp_ = _pad_to(jnp.asarray(d, jnp.uint8), 128, 0)
     Mp = dp_.shape[0]
@@ -94,15 +110,17 @@ def dima_dp_banked(d, q, p: DimaParams = DimaParams(), chip=None, key=None,
         from repro.core.pipeline import dp_gain
         v_range = (0.0, 255.0 * 255.0 * dp_gain(p))
     vr = jnp.asarray([v_range], jnp.float32)
-    codes, volts = _dima_dp_kernel(dp_, jnp.asarray(q, jnp.uint8), cg, ce,
-                                   mg, mo, rn, cn, vr, params=p,
-                                   interpret=interpret)
-    return codes[:M], volts[:M]
+    q8 = jnp.asarray(q, jnp.uint8)
+    out = _dima_dp_kernel(dp_, q8, cg, ce, mg, mo, rn, cn, vr,
+                          _trim_ep(trim, q8.reshape(1, -1)), params=p,
+                          interpret=interpret)
+    return tuple(o[:M] for o in out)
 
 
 def dima_md_banked(d, q, p: DimaParams = DimaParams(), chip=None, key=None,
-                   v_range=None, interpret=None):
-    """Banked MD: d (M,256) rows vs one query. Returns (codes, volts)."""
+                   v_range=None, interpret=None, trim=None):
+    """Banked MD: d (M,256) rows vs one query. Returns (codes, volts);
+    ``trim`` appends fused trimmed scores."""
     M = d.shape[0]
     dp_ = _pad_to(jnp.asarray(d, jnp.uint8), 128, 0)
     Mp = dp_.shape[0]
@@ -112,10 +130,11 @@ def dima_md_banked(d, q, p: DimaParams = DimaParams(), chip=None, key=None,
         from repro.core.pipeline import md_gain
         v_range = (0.0, 255.0 * md_gain(p))
     vr = jnp.asarray([v_range], jnp.float32)
-    codes, volts = _dima_md_kernel(dp_, jnp.asarray(q, jnp.uint8), cg, ce,
-                                   cmp_n, rn, rnb, cn, vr, params=p,
-                                   interpret=interpret)
-    return codes[:M], volts[:M]
+    q8 = jnp.asarray(q, jnp.uint8)
+    out = _dima_md_kernel(dp_, q8, cg, ce, cmp_n, rn, rnb, cn, vr,
+                          _trim_ep(trim, q8.reshape(1, -1)), params=p,
+                          interpret=interpret)
+    return tuple(o[:M] for o in out)
 
 
 def _batch_noise(key, p: DimaParams, B, Mp, kind):
@@ -130,10 +149,11 @@ def _batch_noise(key, p: DimaParams, B, Mp, kind):
 
 
 def dima_dp_matmat(d, qs, p: DimaParams = DimaParams(), chip=None, key=None,
-                   v_range=None, interpret=None):
+                   v_range=None, interpret=None, trim=None):
     """Query-batched DP: d (M,256) uint8 rows vs queries qs (B,256).
     Returns (codes (B,M), volts (B,M)) from ONE kernel launch — the grid
-    is (B, M/128), so the per-query Python loop disappears."""
+    is (B, M/128), so the per-query Python loop disappears.  ``trim``
+    appends fused trimmed scores (B,M)."""
     M = d.shape[0]
     B = qs.shape[0]
     dp_ = _pad_to(jnp.asarray(d, jnp.uint8), 128, 0)
@@ -144,16 +164,18 @@ def dima_dp_matmat(d, qs, p: DimaParams = DimaParams(), chip=None, key=None,
         from repro.core.pipeline import dp_gain
         v_range = (0.0, 255.0 * 255.0 * dp_gain(p))
     vr = jnp.asarray([v_range], jnp.float32)
-    codes, volts = _dima_dp_batch_kernel(dp_, jnp.asarray(qs, jnp.uint8),
-                                         cg, ce, mg, mo, rn, cn, vr,
-                                         params=p, interpret=interpret)
-    return codes[:, :M], volts[:, :M]
+    qs8 = jnp.asarray(qs, jnp.uint8)
+    out = _dima_dp_batch_kernel(dp_, qs8, cg, ce, mg, mo, rn, cn, vr,
+                                _trim_ep(trim, qs8), params=p,
+                                interpret=interpret)
+    return tuple(o[:, :M] for o in out)
 
 
 def dima_md_matmat(d, qs, p: DimaParams = DimaParams(), chip=None, key=None,
-                   v_range=None, interpret=None):
+                   v_range=None, interpret=None, trim=None):
     """Query-batched MD: d (M,256) rows vs queries qs (B,256).
-    Returns (codes (B,M), volts (B,M)) from one kernel launch."""
+    Returns (codes (B,M), volts (B,M)) from one kernel launch; ``trim``
+    appends fused trimmed scores."""
     M = d.shape[0]
     B = qs.shape[0]
     dp_ = _pad_to(jnp.asarray(d, jnp.uint8), 128, 0)
@@ -164,66 +186,79 @@ def dima_md_matmat(d, qs, p: DimaParams = DimaParams(), chip=None, key=None,
         from repro.core.pipeline import md_gain
         v_range = (0.0, 255.0 * md_gain(p))
     vr = jnp.asarray([v_range], jnp.float32)
-    codes, volts = _dima_md_batch_kernel(dp_, jnp.asarray(qs, jnp.uint8),
-                                         cg, ce, cmp_n, rn, rnb, cn, vr,
-                                         params=p, interpret=interpret)
-    return codes[:, :M], volts[:, :M]
+    qs8 = jnp.asarray(qs, jnp.uint8)
+    out = _dima_md_batch_kernel(dp_, qs8, cg, ce, cmp_n, rn, rnb, cn, vr,
+                                _trim_ep(trim, qs8), params=p,
+                                interpret=interpret)
+    return tuple(o[:, :M] for o in out)
 
 
 # ---------------------------------------------------------------------------
 # bank-fused wrappers: the multibank backend's full banks as ONE launch
 # ---------------------------------------------------------------------------
 
-def _stack_bank_noise(key, p: DimaParams, NB, Mp, kind, B=None):
+def _stack_bank_noise(key, p: DimaParams, NB, Mp, kind, B=None, offset=0):
     """Per-bank noise stacks for the bank-leading kernels: bank ``b``
-    draws from ``fold_in(key, b)`` — the multibank key convention — with
-    the per-bank layout of ``_expand_noise`` (matvec, ``B=None``) or
-    ``_batch_noise`` (matmat), so the fused launch is bitwise equal to
-    per-bank ``dima_*_banked`` / ``dima_*_matmat`` launches."""
+    draws from ``fold_in(key, offset + b)`` — the multibank key
+    convention — with the per-bank layout of ``_expand_noise`` (matvec,
+    ``B=None``) or ``_batch_noise`` (matmat), so the fused launch is
+    bitwise equal to per-bank ``dima_*_banked`` / ``dima_*_matmat``
+    launches.  ``offset`` may be a traced scalar: the mesh path passes
+    each shard's global first-bank index so fold_in streams match the
+    host path bank-for-bank."""
     one = ((lambda k: _expand_noise(k, p, Mp, kind)) if B is None
            else (lambda k: _batch_noise(k, p, B, Mp, kind)))
     if key is None:
         return tuple(jnp.zeros((NB,) + a.shape, a.dtype) for a in one(None))
     from repro.core.pipeline import _fold_each
-    return jax.vmap(one)(_fold_each(key, jnp.arange(NB)))
+    return jax.vmap(one)(_fold_each(key, offset + jnp.arange(NB)))
 
 
 @functools.partial(jax.jit,
                    static_argnames=("params", "interpret", "matvec"))
-def _bank_call_dp(d, qs, cg, ce, mg, mo, key, vr, *,
+def _bank_call_dp(d, qs, cg, ce, mg, mo, key, vr, ep, offset, *,
                   params: DimaParams, interpret, matvec):
     NB, Mp = d.shape[0], d.shape[1]
     if matvec:
-        rn, cn = _stack_bank_noise(key, params, NB, Mp, "dp")
+        rn, cn = _stack_bank_noise(key, params, NB, Mp, "dp",
+                                   offset=offset)
         rn, cn = rn[:, None], cn[:, None]
     else:
         rn, cn = _stack_bank_noise(key, params, NB, Mp, "dp",
-                                   B=qs.shape[0])
-    return _dima_dp_bank_kernel(d, qs, cg, ce, mg, mo, rn, cn, vr,
+                                   B=qs.shape[0], offset=offset)
+    return _dima_dp_bank_kernel(d, qs, cg, ce, mg, mo, rn, cn, vr, ep,
                                 params=params, interpret=interpret)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("params", "interpret", "matvec"))
-def _bank_call_md(d, qs, cg, ce, key, vr, *,
+def _bank_call_md(d, qs, cg, ce, key, vr, ep, offset, *,
                   params: DimaParams, interpret, matvec):
     NB, Mp = d.shape[0], d.shape[1]
     if matvec:
-        cmp_n, rn, rnb, cn = _stack_bank_noise(key, params, NB, Mp, "md")
+        cmp_n, rn, rnb, cn = _stack_bank_noise(key, params, NB, Mp, "md",
+                                               offset=offset)
         cmp_n, rn, rnb, cn = (cmp_n[:, None], rn[:, None], rnb[:, None],
                               cn[:, None])
     else:
         cmp_n, rn, rnb, cn = _stack_bank_noise(key, params, NB, Mp, "md",
-                                               B=qs.shape[0])
-    return _dima_md_bank_kernel(d, qs, cg, ce, cmp_n, rn, rnb, cn, vr,
+                                               B=qs.shape[0], offset=offset)
+    return _dima_md_bank_kernel(d, qs, cg, ce, cmp_n, rn, rnb, cn, vr, ep,
                                 params=params, interpret=interpret)
 
 
-def _bank_fused(d, q_or_qs, p, chip, key, v_range, interpret, mode, matvec):
+def _bank_fused(d, q_or_qs, p, chip, key, v_range, interpret, mode, matvec,
+                trim=None, bank_offset=0):
     """Shared driver: pad each bank's rows to the 128-row block, build
     the per-bank noise stacks, launch the (NB, B, M/128) kernel once,
     trim the padding.  Noise generation + launch run inside one jit, so
-    a fused banked op is a single dispatched computation."""
+    a fused banked op is a single dispatched computation.
+
+    ``v_range`` may be a shared (lo, hi) window or a per-bank (NB, 2)
+    array (the bitserial per-plane calibrated windows); ``trim`` a
+    coefficient triple switching on the in-kernel calibration epilogue;
+    ``bank_offset`` the global index of bank 0 for the fold_in streams
+    (the mesh path's shard start, possibly traced)."""
     NB, M = d.shape[0], d.shape[1]
     dp_ = _pad_to(jnp.asarray(d, jnp.uint8), 128, 1)
     cg, ce, mg, mo = _chip_arrays(chip, p)
@@ -231,50 +266,64 @@ def _bank_fused(d, q_or_qs, p, chip, key, v_range, interpret, mode, matvec):
         from repro.core.pipeline import dp_gain, md_gain
         v_range = ((0.0, 255.0 * 255.0 * dp_gain(p)) if mode == "dp"
                    else (0.0, 255.0 * md_gain(p)))
-    vr = jnp.asarray([v_range], jnp.float32)
+    vr = jnp.asarray(v_range, jnp.float32)
+    if vr.ndim == 1:
+        vr = vr[None]
+    if vr.shape[0] != NB:                  # shared window -> one row/bank
+        vr = jnp.broadcast_to(vr, (NB, 2))
     qs = jnp.asarray(q_or_qs, jnp.uint8)
     qs2 = qs.reshape(1, -1) if matvec else qs
+    ep = _trim_ep(trim, qs2)
+    offset = jnp.asarray(bank_offset, jnp.int32)
     if mode == "dp":
-        codes, volts = _bank_call_dp(dp_, qs2, cg, ce, mg, mo, key, vr,
-                                     params=p, interpret=interpret,
-                                     matvec=matvec)
+        out = _bank_call_dp(dp_, qs2, cg, ce, mg, mo, key, vr, ep, offset,
+                            params=p, interpret=interpret, matvec=matvec)
     else:
-        codes, volts = _bank_call_md(dp_, qs2, cg, ce, key, vr,
-                                     params=p, interpret=interpret,
-                                     matvec=matvec)
+        out = _bank_call_md(dp_, qs2, cg, ce, key, vr, ep, offset,
+                            params=p, interpret=interpret, matvec=matvec)
     if matvec:
-        return codes[:, 0, :M], volts[:, 0, :M]      # (NB, M)
-    return codes[:, :, :M], volts[:, :, :M]          # (NB, B, M)
+        return tuple(o[:, 0, :M] for o in out)       # (NB, M)
+    return tuple(o[:, :, :M] for o in out)           # (NB, B, M)
 
 
 def dima_dp_bank_matvec(d, q, p: DimaParams = DimaParams(), chip=None,
-                        key=None, v_range=None, interpret=None):
+                        key=None, v_range=None, interpret=None, trim=None,
+                        bank_offset=0):
     """Banked fused DP matvec: d (NB, M, 256) uint8 — the multibank
     backend's stacked full banks — vs one query q (256,).  Bank ``b``
-    draws noise from ``fold_in(key, b)`` with the ``dima_dp_banked``
-    layout.  Returns (codes (NB, M), volts (NB, M)) from ONE launch."""
-    return _bank_fused(d, q, p, chip, key, v_range, interpret, "dp", True)
+    draws noise from ``fold_in(key, bank_offset + b)`` with the
+    ``dima_dp_banked`` layout.  Returns (codes (NB, M), volts (NB, M))
+    from ONE launch; ``trim`` appends fused trimmed scores (NB, M)."""
+    return _bank_fused(d, q, p, chip, key, v_range, interpret, "dp", True,
+                       trim, bank_offset)
 
 
 def dima_md_bank_matvec(d, q, p: DimaParams = DimaParams(), chip=None,
-                        key=None, v_range=None, interpret=None):
+                        key=None, v_range=None, interpret=None, trim=None,
+                        bank_offset=0):
     """Banked fused MD matvec (see ``dima_dp_bank_matvec``)."""
-    return _bank_fused(d, q, p, chip, key, v_range, interpret, "md", True)
+    return _bank_fused(d, q, p, chip, key, v_range, interpret, "md", True,
+                       trim, bank_offset)
 
 
 def dima_dp_bank_matmat(d, qs, p: DimaParams = DimaParams(), chip=None,
-                        key=None, v_range=None, interpret=None):
+                        key=None, v_range=None, interpret=None, trim=None,
+                        bank_offset=0):
     """Banked fused DP matmat: d (NB, M, 256) vs queries qs (B, 256);
     bank ``b`` uses the ``dima_dp_matmat`` noise layout seeded with
-    ``fold_in(key, b)``.  Returns (codes (NB, B, M), volts) from ONE
-    (NB, B, M/128)-grid launch."""
-    return _bank_fused(d, qs, p, chip, key, v_range, interpret, "dp", False)
+    ``fold_in(key, bank_offset + b)``.  Returns (codes (NB, B, M),
+    volts) from ONE (NB, B, M/128)-grid launch; ``trim`` appends fused
+    trimmed scores."""
+    return _bank_fused(d, qs, p, chip, key, v_range, interpret, "dp", False,
+                       trim, bank_offset)
 
 
 def dima_md_bank_matmat(d, qs, p: DimaParams = DimaParams(), chip=None,
-                        key=None, v_range=None, interpret=None):
+                        key=None, v_range=None, interpret=None, trim=None,
+                        bank_offset=0):
     """Banked fused MD matmat (see ``dima_dp_bank_matmat``)."""
-    return _bank_fused(d, qs, p, chip, key, v_range, interpret, "md", False)
+    return _bank_fused(d, qs, p, chip, key, v_range, interpret, "md", False,
+                       trim, bank_offset)
 
 
 # ---------------------------------------------------------------------------
@@ -296,7 +345,8 @@ def dima_dp_plane_matvec(planes, q, p: DimaParams = DimaParams(), chip=None,
     query q (256,).  Plane ``k`` draws noise from ``fold_in(key, k)``.
     Returns (codes (B, M), volts (B, M)) from ONE launch.  Pass a
     ``calibration.plane_v_range`` window — the full-scale default wastes
-    the code space on narrow planes."""
+    the code space on narrow planes — or a per-plane (B, 2) array of
+    calibrated windows (``calibration.calibrate_plane_range``)."""
     return _bank_fused(planes, q, p, chip, key, v_range, interpret,
                        "dp", True)
 

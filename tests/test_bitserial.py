@@ -279,3 +279,65 @@ def test_robust_matmat_dispatch_count():
     with dima.count_dispatches() as c:
         mb.matmat(D, QS, mode="dp", key=KEY)
     assert c.n == R * n_occupied
+
+
+# ---------------------------------------------------------------------------
+# per-plane calibrated ADC windows (data-driven auto-ranging, PR 10)
+# ---------------------------------------------------------------------------
+
+def test_calibrate_plane_range_shape_and_bounds():
+    """(B, 2) windows; each row a proper lo<hi interval sitting inside
+    the analytic worst-case window (which every real operand undercuts),
+    and widening with the margin."""
+    qcal = rng.integers(0, 256, (16, 256), dtype=np.uint8)
+    for n_planes in (2, 4, 8):
+        pvr = np.asarray(cal_mod.calibrate_plane_range(
+            D, qcal, P, n_planes=n_planes))
+        assert pvr.shape == (n_planes, 2)
+        assert (pvr[:, 0] < pvr[:, 1]).all()
+        lo_a, hi_a = cal_mod.plane_v_range(P, "dp", n_planes)
+        assert (pvr[:, 1] <= hi_a + 1e-6).all()
+        wide = np.asarray(cal_mod.calibrate_plane_range(
+            D, qcal, P, n_planes=n_planes, margin=0.5))
+        assert (wide[:, 1] - wide[:, 0] > pvr[:, 1] - pvr[:, 0]).all()
+    with pytest.raises(NotImplementedError):
+        cal_mod.calibrate_plane_range(D, qcal, P, mode="md")
+
+
+@pytest.mark.parametrize("n_planes", [2, 4, 8])
+def test_calibrated_plane_windows_tighten_physical_error(n_planes):
+    """The satellite's acceptance: the physical path with data-driven
+    per-plane windows (``BitSerialBackend(plane_v_range=...)``) must
+    beat the analytic shared window on reconstruction error — each
+    plane's 8-b ramp now spans its actual swing instead of the
+    worst-case one."""
+    qcal = rng.integers(0, 256, (32, 256), dtype=np.uint8)
+    exact = D.astype(np.int64) @ Q.astype(np.int64)
+    pvr = cal_mod.calibrate_plane_range(D, qcal, P, n_planes=n_planes)
+    be_a = dima.get_backend("bitserial", P, n_planes=n_planes,
+                            physical=True)
+    be_c = dima.get_backend("bitserial", P, n_planes=n_planes,
+                            physical=True, plane_v_range=pvr)
+    err_a = np.abs(np.asarray(be_a.decode(be_a.matvec(D, Q).code),
+                              np.float64) - exact).max()
+    err_c = np.abs(np.asarray(be_c.decode(be_c.matvec(D, Q).code),
+                              np.float64) - exact).max()
+    assert err_c < err_a, \
+        f"calibrated windows did not tighten: {err_c} >= {err_a}"
+
+
+def test_physical_calibrated_windows_still_one_dispatch():
+    """Calibrated windows ride the same (B, 2) per-bank v_range operand:
+    the physical plane-accumulate path stays ONE launch, trim fused or
+    not."""
+    qcal = rng.integers(0, 256, (8, 256), dtype=np.uint8)
+    pvr = cal_mod.calibrate_plane_range(D, qcal, P, n_planes=4)
+    be = dima.get_backend("bitserial", P, CHIP, n_planes=4, physical=True,
+                          plane_v_range=pvr)
+    trim = np.asarray([0.9, -0.2, 1.5], np.float32)
+    be.matvec(D, Q, key=KEY)
+    be.matvec(D, Q, key=KEY, trim=trim)
+    with dima.count_dispatches() as c:
+        out = be.matvec(D, Q, key=KEY, trim=trim)
+    assert c.n == 1
+    assert out.trimmed.shape == out.code.shape

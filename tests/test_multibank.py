@@ -417,6 +417,31 @@ def test_auto_min_rows_from_measured_crossover(tmp_path, monkeypatch):
     assert dima.get_backend("auto", P, min_rows=7).min_rows == 7
 
 
+def test_auto_min_rows_platform_keyed_crossover(tmp_path, monkeypatch):
+    """The platform-keyed ``crossover`` section: AutoBackend reads the
+    entry matching ``jax.default_backend()``; other platforms' rows are
+    ignored; the nested section takes precedence over the legacy flat
+    tags; a section without this platform falls back to the flat pair."""
+    plat = jax.default_backend()
+    other = "tpu" if plat != "tpu" else "gpu"
+    bench = tmp_path / "BENCH_dima_api.json"
+    monkeypatch.setenv("DIMA_BENCH_JSON", str(bench))
+    bench.write_text(json.dumps(
+        {"crossover": {plat: {"rows": 32}, other: {"rows": 999}}}))
+    assert dima.get_backend("auto", P).min_rows == 32
+    # nested beats legacy flat
+    bench.write_text(json.dumps(
+        {"crossover": {plat: {"rows": 48}},
+         "auto_crossover_rows": 64, "auto_crossover_platform": plat}))
+    assert dima.get_backend("auto", P).min_rows == 48
+    # only the OTHER platform measured -> static default, not its value
+    bench.write_text(json.dumps({"crossover": {other: {"rows": 16}}}))
+    assert dima.get_backend("auto", P).min_rows == 128
+    # "never" in the nested layout keeps auto off pallas entirely
+    bench.write_text(json.dumps({"crossover": {plat: {"rows": "never"}}}))
+    assert dima.get_backend("auto", P).min_rows > 10 ** 9
+
+
 def test_multibank_rejects_nested_inner():
     with pytest.raises(ValueError, match="single-bank"):
         dima.get_backend("multibank", P,
@@ -426,14 +451,70 @@ def test_multibank_rejects_nested_inner():
 def test_multibank_rejects_bad_bank_count_and_mesh_inner():
     with pytest.raises(ValueError, match="n_banks"):
         dima.get_backend("multibank", P, n_banks=0)
-    # the mesh path runs the reference pipeline per shard: any other
-    # inner must fail at construction, not silently diverge from the
-    # host path
+    # the mesh path runs the reference pipeline or the banked Pallas
+    # kernels per shard: any other inner must fail at construction, not
+    # silently diverge from the host path
     from repro.distributed.sharding import bank_mesh
-    for inner in ("pallas", "digital"):
-        with pytest.raises(ValueError, match="reference pipeline"):
-            dima.get_backend("multibank", P, inner=inner, n_banks=8,
-                             mesh=bank_mesh(8))
+    mb = dima.get_backend("multibank", P, inner="pallas", n_banks=8,
+                          mesh=bank_mesh(8))
+    assert mb.inner.name == "pallas"
+    with pytest.raises(ValueError, match="reference pipeline"):
+        dima.get_backend("multibank", P, inner="digital", n_banks=8,
+                         mesh=bank_mesh(8))
+
+
+def test_mesh_pallas_inner_matches_host_pallas_fused():
+    """The kernel-only device path: a pallas-inner mesh matvec/matmat
+    runs the banked Pallas kernels per shard and must reproduce the host
+    fused-pallas path — ADC codes BITWISE; volts and the fused trimmed
+    output to the float-assembly tolerance (interpret-mode Pallas
+    compiles through XLA, which may reassociate the shared voltage chain
+    by ~1 ulp when the trim output is present — same policy as the
+    pallas~reference row of the standing parity matrix)."""
+    from repro.distributed.sharding import bank_mesh
+    mesh = bank_mesh(8)
+    mb_mesh = dima.get_backend("multibank", P, CHIP, n_banks=8,
+                               inner="pallas", mesh=mesh)
+    mb_host = dima.get_backend("multibank", P, CHIP, n_banks=8,
+                               inner="pallas")
+    trim = np.asarray([0.9, -0.3, 2.0], np.float32)
+    for key in (None, KEY):
+        a = mb_mesh.matvec(D[:160], Q, key=key, trim=trim)
+        b = mb_host.matvec(D[:160], Q, key=key, trim=trim)
+        np.testing.assert_array_equal(np.asarray(a.code),
+                                      np.asarray(b.code))
+        np.testing.assert_allclose(np.asarray(a.volts),
+                                   np.asarray(b.volts), atol=1e-7)
+        np.testing.assert_allclose(np.asarray(a.trimmed),
+                                   np.asarray(b.trimmed), rtol=2e-6,
+                                   atol=1e-2)
+        am = mb_mesh.matmat(D[:160], QS, key=key, trim=trim)
+        bm = mb_host.matmat(D[:160], QS, key=key, trim=trim)
+        assert am.code.shape == (3, 160)
+        np.testing.assert_array_equal(np.asarray(am.code),
+                                      np.asarray(bm.code))
+        np.testing.assert_allclose(np.asarray(am.trimmed),
+                                   np.asarray(bm.trimmed), rtol=2e-6,
+                                   atol=1e-2)
+
+
+def test_mesh_pallas_inner_reference_oracle():
+    """The mesh-pallas path against the independent oracle: per-bank
+    *reference* runs — codes bitwise at zero noise (the cross-substrate
+    regime the standing parity matrix pins; a noisy draw sits at ADC
+    rounding boundaries where the kernel's float assembly may flip a
+    code by 1 LSB vs the jnp pipeline).  This ties the kernel-only
+    device path to the digital-merge contract, not just to
+    pallas-vs-pallas self-consistency."""
+    from repro.distributed.sharding import bank_mesh
+    mb = dima.get_backend("multibank", P, CHIP, n_banks=8,
+                          inner="pallas", mesh=bank_mesh(8))
+    ref = dima.get_backend("reference", P, CHIP)
+    out = mb.matvec(D[:160], Q)
+    merged = np.concatenate(
+        [np.asarray(ref.matvec(D[a:z], Q).code)
+         for (a, z) in mb.bank_slices(160)])
+    np.testing.assert_array_equal(np.asarray(out.code), merged)
 
 
 def test_measured_min_rows_is_cwd_independent(tmp_path, monkeypatch):

@@ -1,0 +1,312 @@
+"""Fused ADC-merge + calibration-trim epilogue (``trim=`` on the backend
+ops, PR 10).
+
+Contracts pinned here:
+
+* **Codes are invariant**: passing ``trim`` must not change a single ADC
+  code or voltage on any backend — the epilogue is strictly downstream
+  of the conversion.
+* **The trimmed output is the calibration epilogue**: it matches the
+  eager ``pipeline.trim_epilogue`` on the same codes to float-assembly
+  tolerance (XLA reassociates the f32 affine chain by ~1 ulp of the
+  score scale across compilation contexts — the codes stay exact, the
+  f32 score does not; cross-context comparisons use rtol ≈ 1e-6).
+* **One launch in, trimmed scores out**: fusing the epilogue adds ZERO
+  dispatches on every fused path (pallas, multibank fused, bitserial
+  physical), including the flagship 4096×256/32-bank op.
+* ``calibration.trimmed_scores`` fused fast-path == the legacy
+  decode-then-trim path (same codes, f32-vs-f64 trim tolerance).
+* Interpret-mode Pallas parity for the in-kernel epilogue, and the
+  ``DIMA_PALLAS_INTERPRET`` env contract it rides on in CI.
+* The signed-rail app path (``applications.signed_rail_scores``,
+  ``quant.bitplanes.sign_split``): zero-noise bitwise vs the digital
+  backend's straight-pipeline oracle, and bitwise-reproducible across
+  the analog substrates.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import dima
+from repro.core import adc as adc_mod
+from repro.core import api as api_mod
+from repro.core import applications as app_mod
+from repro.core import calibration as cal_mod
+from repro.core import noise as noise_mod
+from repro.core import pipeline as pl
+from repro.core.params import DimaParams
+from repro.quant import bitplanes as bp
+
+P = DimaParams()
+rng = np.random.default_rng(0)
+D = jnp.asarray(rng.integers(0, 256, (256, 256)))
+Q = jnp.asarray(rng.integers(0, 256, (256,)))
+QS = jnp.asarray(rng.integers(0, 256, (3, 256)))
+CHIP = noise_mod.sample_chip(jax.random.PRNGKey(3), P)
+KEY = jax.random.PRNGKey(9)
+TRIM = np.asarray([0.97, -0.4, 12.5], np.float32)
+
+#: every backend that takes ``trim=`` on matvec/matmat, with kwargs
+BACKENDS = [
+    ("digital", {}, False),
+    ("reference", {}, True),
+    ("pallas", {}, True),
+    ("multibank", {"n_banks": 8}, True),
+    ("multibank", {"n_banks": 8, "fused": False}, True),
+    ("bitserial", {"n_planes": 2}, False),
+    ("bitserial", {"n_planes": 4, "physical": True}, False),
+]
+
+
+def _mk(name, kwargs, chip_ok):
+    return dima.get_backend(name, P, CHIP if chip_ok else None, **kwargs)
+
+
+def _oracle(be, code, query, v_range=None, per_query=False):
+    """Eager ``pipeline.trim_epilogue`` on the backend's own codes."""
+    q_sum = jnp.asarray(query).astype(jnp.float32).sum(-1)
+    if per_query:
+        q_sum = q_sum[:, None]
+    return np.asarray(pl.trim_epilogue(code, q_sum, jnp.asarray(TRIM),
+                                       be.p, v_range, "dp"))
+
+
+@pytest.mark.parametrize("name,kwargs,chip_ok", BACKENDS,
+                         ids=[f"{n}({','.join(map(str, k.values()))})"
+                              for n, k, _ in BACKENDS])
+def test_trim_preserves_codes_and_matches_epilogue(name, kwargs, chip_ok):
+    be = _mk(name, kwargs, chip_ok)
+    key = KEY if chip_ok else None
+    plain = be.matvec(D, Q, key=key)
+    trimmed = be.matvec(D, Q, key=key, trim=TRIM)
+    np.testing.assert_array_equal(np.asarray(plain.code),
+                                  np.asarray(trimmed.code))
+    np.testing.assert_array_equal(np.asarray(plain.volts),
+                                  np.asarray(trimmed.volts))
+    assert plain.trimmed is None
+    assert trimmed.trimmed.shape == trimmed.code.shape
+    np.testing.assert_allclose(np.asarray(trimmed.trimmed),
+                               _oracle(be, trimmed.code, Q),
+                               rtol=2e-6, atol=1e-2)
+
+
+@pytest.mark.parametrize("name,kwargs,chip_ok", BACKENDS,
+                         ids=[f"{n}({','.join(map(str, k.values()))})"
+                              for n, k, _ in BACKENDS])
+def test_trim_matmat_codes_and_epilogue(name, kwargs, chip_ok):
+    be = _mk(name, kwargs, chip_ok)
+    key = KEY if chip_ok else None
+    plain = be.matmat(D, QS, key=key)
+    trimmed = be.matmat(D, QS, key=key, trim=TRIM)
+    np.testing.assert_array_equal(np.asarray(plain.code),
+                                  np.asarray(trimmed.code))
+    assert trimmed.trimmed.shape == trimmed.code.shape
+    np.testing.assert_allclose(np.asarray(trimmed.trimmed),
+                               _oracle(be, trimmed.code, QS,
+                                       per_query=True),
+                               rtol=2e-6, atol=1e-2)
+
+
+@pytest.mark.parametrize("name,kwargs,chip_ok", BACKENDS,
+                         ids=[f"{n}({','.join(map(str, k.values()))})"
+                              for n, k, _ in BACKENDS])
+def test_trim_adds_zero_dispatches(name, kwargs, chip_ok):
+    """Fusing the epilogue must not cost a single extra launch on ANY
+    backend — fused paths stay at their count (1 for pallas / fused
+    multibank / physical bitserial), the loop oracle stays at one per
+    bank."""
+    be = _mk(name, kwargs, chip_ok)
+    key = KEY if chip_ok else None
+    be.matvec(D, Q, key=key)
+    be.matvec(D, Q, key=key, trim=TRIM)           # warm both traces
+    with dima.count_dispatches() as c0:
+        be.matvec(D, Q, key=key)
+    with dima.count_dispatches() as c1:
+        be.matvec(D, Q, key=key, trim=TRIM)
+    assert c1.n == c0.n, f"trim added {c1.n - c0.n} dispatches"
+
+
+def test_flagship_fused_trimmed_matvec_is_one_dispatch():
+    """The acceptance op: 4096×256 through 32 banks with the calibration
+    epilogue fused — exactly ONE compiled-computation launch, trimmed
+    scores out."""
+    big = jnp.asarray(rng.integers(0, 256, (4096, 256)))
+    mb = dima.get_backend("multibank", P)
+    assert mb.n_banks == 32
+    mb.matvec(big, Q, key=KEY, trim=TRIM)
+    with dima.count_dispatches() as c:
+        out = mb.matvec(big, Q, key=KEY, trim=TRIM)
+    assert c.n == 1
+    assert out.trimmed.shape == (4096,)
+    np.testing.assert_allclose(np.asarray(out.trimmed),
+                               _oracle(mb, out.code, Q),
+                               rtol=2e-6, atol=1e-2)
+
+
+def test_trim_dot_md_mode_reference():
+    """The epilogue also serves md mode (decode via md gain)."""
+    be = dima.get_backend("reference", P, CHIP)
+    out = be.dot(D[0], Q, mode="md", key=KEY, trim=TRIM)
+    np.testing.assert_allclose(
+        np.asarray(out.trimmed),
+        np.asarray(pl.trim_epilogue(out.code,
+                                    jnp.asarray(Q, jnp.float32).sum(),
+                                    jnp.asarray(TRIM), P, None, "md")),
+        rtol=2e-6, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# calibration.trimmed_scores fused fast-path
+# ---------------------------------------------------------------------------
+
+def _single_chunk_cal(be):
+    stored = D[:1]
+    qcal = jnp.asarray(rng.integers(0, 256, (16, 256)))
+    target = np.asarray(stored, np.int64) @ np.asarray(qcal, np.int64).T
+    return cal_mod.calibrate(be, stored, qcal, mode="dp",
+                             target=target.ravel().astype(np.float64),
+                             key=jax.random.PRNGKey(1)), stored, qcal
+
+
+def test_trimmed_scores_fused_matches_legacy():
+    """Single-conversion operands auto-route through the fused epilogue;
+    the result agrees with the legacy decode→f64-trim path to f32 trim
+    tolerance, and the codes underneath are bitwise (same fold_in(key,0)
+    stream)."""
+    be = dima.get_backend("reference", P, CHIP)
+    cal, stored, qcal = _single_chunk_cal(be)
+    qte = jnp.asarray(rng.integers(0, 256, (8, 256)))
+    kt = jax.random.PRNGKey(2)
+    fused = cal_mod.trimmed_scores(cal, be, stored, qte, key=kt)
+    legacy = cal_mod.trimmed_scores(cal, be, stored, qte, key=kt,
+                                    fused=False)
+    assert fused.shape == legacy.shape
+    np.testing.assert_allclose(fused, legacy, rtol=2e-6, atol=1e-2)
+
+
+def test_trimmed_scores_fused_rejects_multi_chunk():
+    be = dima.get_backend("reference", P)
+    stored = jnp.asarray(rng.integers(0, 256, (1, 506)))
+    qcal = jnp.asarray(rng.integers(0, 256, (8, 506)))
+    target = (np.asarray(stored, np.int64) @
+              np.asarray(qcal, np.int64).T).ravel().astype(np.float64)
+    cal = cal_mod.calibrate(be, stored, qcal, mode="dp", target=target)
+    with pytest.raises(ValueError, match="fused"):
+        cal_mod.trimmed_scores(cal, be, stored, qcal, fused=True)
+    # auto (fused=None) falls back to the legacy chunked path
+    out = cal_mod.trimmed_scores(cal, be, stored, qcal)
+    assert out.shape == (8,)
+
+
+# ---------------------------------------------------------------------------
+# interpret-mode Pallas parity for the in-kernel epilogue (CI leg)
+# ---------------------------------------------------------------------------
+
+def test_kernel_epilogue_interpret_mode_parity():
+    """The fused kernel epilogue under explicit ``interpret=True``: codes
+    bitwise vs the no-trim launch, trimmed == eager
+    ``pipeline.trim_epilogue`` on those codes (f32 tolerance)."""
+    vr = jnp.asarray([[0.0, 255.0 * 255.0 * pl.dp_gain(P)]], jnp.float32)
+    d = np.asarray(D[:128], np.uint8)
+    q = np.asarray(Q, np.uint8)
+    ep = np.concatenate([TRIM, [float(q.astype(np.int64).sum())]]
+                        ).astype(np.float32).reshape(1, 4)
+    from repro.kernels import dima_dp as kdp
+    chip_args = (CHIP["col_gain"], CHIP["cap_ratio_err"],
+                 CHIP["mult_gain"], CHIP["mult_off"])
+    base = kdp.dima_dp(d, q, *chip_args,
+                       np.zeros((128, 2, 128), np.float32),
+                       np.zeros((128, 2, 2), np.float32), vr,
+                       params=P, interpret=True)
+    fused = kdp.dima_dp(d, q, *chip_args,
+                        np.zeros((128, 2, 128), np.float32),
+                        np.zeros((128, 2, 2), np.float32), vr,
+                        jnp.asarray(ep), params=P, interpret=True)
+    assert len(base) == 2 and len(fused) == 3
+    np.testing.assert_array_equal(np.asarray(base[0]),
+                                  np.asarray(fused[0]))
+    want = pl.trim_epilogue(fused[0], jnp.asarray(ep[0, 3]),
+                            jnp.asarray(TRIM), P,
+                            (float(vr[0, 0]), float(vr[0, 1])), "dp")
+    np.testing.assert_allclose(np.asarray(fused[2]), np.asarray(want),
+                               rtol=2e-6, atol=1e-2)
+
+
+def test_resolve_interpret_env_contract(monkeypatch):
+    """The ``DIMA_PALLAS_INTERPRET`` env guard the CI interpret leg sets:
+    explicit argument wins, env parses the usual falsy spellings, and the
+    platform default (CPU → interpret) holds when both are absent."""
+    from repro.kernels._interpret import resolve_interpret
+    monkeypatch.delenv("DIMA_PALLAS_INTERPRET", raising=False)
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    assert resolve_interpret(None) == (jax.default_backend() == "cpu")
+    for raw, want in (("1", True), ("true", True), ("on", True),
+                      ("0", False), ("false", False), ("no", False),
+                      ("off", False)):
+        monkeypatch.setenv("DIMA_PALLAS_INTERPRET", raw)
+        assert resolve_interpret(None) is want, raw
+        assert resolve_interpret(not want) is (not want)  # arg still wins
+
+
+# ---------------------------------------------------------------------------
+# signed-rail app path (quant.bitplanes.sign_split)
+# ---------------------------------------------------------------------------
+
+W_SIGNED = rng.integers(-128, 128, size=506).astype(np.int32)
+X_RAIL = rng.integers(0, 256, size=(8, 506)).astype(np.uint8)
+
+
+def test_signed_rail_scores_digital_bitwise_oracle():
+    """Zero-noise bitwise parity vs the digital backend: the scorer's
+    per-chunk ADC codes equal the integer numpy oracle exactly, and the
+    composed score equals the chunked-loop rail difference bit for
+    bit."""
+    be = dima.get_backend("digital", P)
+    pos, neg = (np.asarray(a) for a in bp.sign_split(W_SIGNED))
+    np.testing.assert_array_equal(pos.astype(np.int64)
+                                  - neg.astype(np.int64), W_SIGNED)
+    gain = pl.dp_gain(P)
+    for a, b in api_mod.iter_chunks(506, P.dims_per_conversion):
+        for rail in (pos, neg):
+            out = be.dot(jnp.asarray(rail)[None, a:b], X_RAIL[:, a:b],
+                         mode="dp")
+            d = np.zeros(P.dims_per_conversion, np.int64)
+            d[:b - a] = rail[a:b]
+            q = np.zeros((len(X_RAIL), P.dims_per_conversion), np.int64)
+            q[:, :b - a] = X_RAIL[:, a:b]
+            v = (q * d).sum(-1) / P.dims_per_conversion * gain
+            code = adc_mod.adc(jnp.asarray(v, jnp.float32), 0.0,
+                               255.0 * 255.0 * gain, P)
+            np.testing.assert_array_equal(np.asarray(out.code).ravel(),
+                                          np.asarray(code))
+    got = app_mod.signed_rail_scores(be, W_SIGNED, X_RAIL)
+    want = (np.asarray(api_mod.chunked_dot_loop(be, pos[None, :], X_RAIL,
+                                                mode="dp"), np.float64)
+            - np.asarray(api_mod.chunked_dot_loop(be, neg[None, :],
+                                                  X_RAIL, mode="dp"),
+                         np.float64))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_signed_rail_scores_bitwise_across_analog_substrates():
+    """Zero noise: reference == pallas == multibank on the signed-rail
+    scorer, bit for bit (the standing parity matrix extends to the rail
+    composition)."""
+    ref = app_mod.signed_rail_scores(
+        dima.get_backend("reference", P), W_SIGNED, X_RAIL)
+    for name, kw in (("pallas", {}), ("multibank", {"n_banks": 1})):
+        got = app_mod.signed_rail_scores(
+            dima.get_backend(name, P, **kw), W_SIGNED, X_RAIL)
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_run_svm_signed_rails_end_to_end():
+    """The opt-in app path: signed-rail SVM accuracy stays within the
+    paper's degradation envelope of the digital score (and the default
+    offset-binary path is untouched by the flag's existence)."""
+    r = app_mod.run_svm(P, CHIP, KEY, signed_rails=True)
+    assert r.acc_digital - r.acc_dima <= 0.03
+    assert r.acc_dima >= 0.85
